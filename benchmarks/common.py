@@ -1,0 +1,77 @@
+"""Shared benchmark utilities.
+
+Paper scale is 500k points × 5300 queries; the default here is scaled to
+50k × 500 so a full `python -m benchmarks.run` completes in minutes on
+one CPU core (pass --full for paper scale). All relative comparisons —
+the quantities the paper reports — are scale-stable; EXPERIMENTS.md
+records both scales for the headline tables.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import TreeSpec, build
+from repro.data.synthetic import ALL_DATASETS, SYNTHETIC, make, uniform_queries
+
+FAST_N = 50_000
+FAST_Q = 500
+FULL_N = 500_000
+FULL_Q = 5_300
+
+SPECS = {
+    "ballstar": lambda: TreeSpec.ballstar(leaf_size=32),
+    "ball": lambda: TreeSpec.ball(leaf_size=32),
+    "kd": lambda: TreeSpec.kd(leaf_size=32),
+}
+
+
+def sizes(full: bool):
+    return (FULL_N, FULL_Q) if full else (FAST_N, FAST_Q)
+
+
+def dataset(name: str, n: int, seed: int = 0):
+    return make(name, n, seed=seed)
+
+
+def queries_for(pts: np.ndarray, n_q: int, seed: int = 1):
+    return uniform_queries(pts, n_q, seed=seed)
+
+
+def radius_for(pts: np.ndarray, frac: float = 0.05) -> float:
+    """Range-query radius as a fraction of the bounding-box diagonal."""
+    diag = float(np.linalg.norm(pts.max(0) - pts.min(0)))
+    return frac * diag
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.perf_counter()
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeat
+    return out, dt
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def build_timed(pts, algo: str):
+    spec = SPECS[algo]()
+    tree, dt = timed(build, pts, spec)
+    return tree, dt
+
+
+__all__ = [
+    "ALL_DATASETS",
+    "SYNTHETIC",
+    "SPECS",
+    "sizes",
+    "dataset",
+    "queries_for",
+    "radius_for",
+    "timed",
+    "emit",
+    "build_timed",
+]

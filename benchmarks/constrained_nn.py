@@ -1,0 +1,52 @@
+"""Paper Table 2: constrained-NN (Algorithm 2) vs the Liu et al. KNN
+baseline (KNN-then-filter), both on ball*-tree partitioning ("for the
+sake of fairness, we use ball*-tree's space-partitioning algorithm for
+both of the competing methods")."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import search_host as sh
+
+from .common import (
+    SYNTHETIC,
+    build_timed,
+    dataset,
+    emit,
+    queries_for,
+    radius_for,
+    sizes,
+)
+
+
+def run(full: bool = False, k: int = 10):
+    n, n_q = sizes(full)
+    n_q = min(n_q, 150 if not full else n_q)
+    rows = {}
+    for name in sorted(SYNTHETIC):
+        pts = dataset(name, n)
+        queries = queries_for(pts, n_q)
+        r = radius_for(pts)
+        tree, _ = build_timed(pts, "ballstar")
+        v_base = float(
+            np.mean(
+                [sh.knn_then_filter(tree, q, k, r).nodes_visited for q in queries]
+            )
+        )
+        v_cnn = float(
+            np.mean(
+                [sh.constrained_knn(tree, q, k, r).nodes_visited for q in queries]
+            )
+        )
+        rows[name] = {"knn_filter": v_base, "constrained": v_cnn}
+        emit(
+            f"constrained_nn/{name}",
+            0.0,
+            f"knn_filter={v_base:.1f};constrained={v_cnn:.1f};"
+            f"reduction={100 * (1 - v_cnn / max(v_base, 1e-9)):.0f}%",
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Paper Fig 5 + Table 1: average root->leaf depth of ball*-tree vs
+ball-tree vs KD-tree, on the 5 synthetic + 2 real-world-like datasets."""
+from __future__ import annotations
+
+from .common import ALL_DATASETS, build_timed, dataset, emit, sizes
+
+
+def run(full: bool = False):
+    n, _ = sizes(full)
+    rows = {}
+    for name in sorted(ALL_DATASETS):
+        pts = dataset(name, n)
+        row = {}
+        for algo in ("ballstar", "ball", "kd"):
+            tree, dt = build_timed(pts, algo)
+            row[algo] = tree.average_depth()
+            emit(
+                f"depth/{name}/{algo}",
+                dt * 1e6,
+                f"avg_depth={row[algo]:.2f};build_s={dt:.2f}",
+            )
+        rows[name] = row
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,66 @@
+"""Kernel microbenchmarks + analytic TPU roofline for the two Pallas
+kernels. On CPU the kernels execute in interpret mode (Python), so
+wall-clock here measures the jnp oracle (what XLA:CPU runs); the TPU
+numbers are analytic roofline terms from the kernel's exact FLOP/byte
+counts (v5e: 197 TFLOP/s bf16, 819 GB/s HBM)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from .common import emit, timed
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def run(full: bool = False):
+    rng = np.random.default_rng(0)
+    shapes = [(512, 2048, 64), (1024, 4096, 128)]
+    for m, n, d in shapes:
+        q = jnp.asarray(rng.standard_normal((m, d)), jnp.bfloat16)
+        p = jnp.asarray(rng.standard_normal((n, d)), jnp.bfloat16)
+        # oracle wall time (XLA:CPU) — correctness-path throughput
+        fn = lambda: ref.pairwise_sq_l2(q, p).block_until_ready()
+        fn()
+        _, dt = timed(fn, repeat=3)
+        flops = 2 * m * n * d + 2 * (m + n) * d  # matmul + norms
+        bytes_ = (m * d + n * d) * 2 + m * n * 4
+        t_comp = flops / PEAK_FLOPS
+        t_mem = bytes_ / HBM_BW
+        emit(
+            f"kernel/pairwise_l2/{m}x{n}x{d}",
+            dt * 1e6,
+            f"cpu_ref_us;tpu_compute_us={t_comp * 1e6:.1f};"
+            f"tpu_memory_us={t_mem * 1e6:.1f};"
+            f"bound={'compute' if t_comp > t_mem else 'memory'}",
+        )
+    for n, d in [(200_000, 2), (100_000, 64)]:
+        x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+        mean = x.mean(0)
+        w = jnp.asarray(rng.standard_normal(d), jnp.float32)
+        fn = lambda: ref.cov_matvec(x, mean, w).block_until_ready()
+        fn()
+        _, dt = timed(fn, repeat=3)
+        flops = 4 * n * d  # two matvecs
+        bytes_ = n * d * 4  # single streaming read (fused)
+        emit(
+            f"kernel/cov_matvec/{n}x{d}",
+            dt * 1e6,
+            f"cpu_ref_us;tpu_memory_us={bytes_ / HBM_BW * 1e6:.1f};"
+            f"ai={flops / bytes_:.2f}flops_per_byte;bound=memory",
+        )
+    # interpret-mode correctness spot check rides along
+    q = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
+    p = jnp.asarray(rng.standard_normal((96, 32)), jnp.float32)
+    np.testing.assert_allclose(
+        ops.pairwise_sq_l2(q, p), ref.pairwise_sq_l2(q, p), rtol=1e-4, atol=1e-4
+    )
+    emit("kernel/interpret_check", 0.0, "allclose_ok")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Paper Fig 6: average nodes visited per query, same search algorithm
+(constrained NN) across the three partitioning strategies — isolates the
+space-partitioning contribution, exactly as §5.1 does."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import search_host as sh
+
+from .common import (
+    SYNTHETIC,
+    build_timed,
+    dataset,
+    emit,
+    queries_for,
+    radius_for,
+    sizes,
+)
+
+
+def run(full: bool = False, k: int = 10):
+    n, n_q = sizes(full)
+    n_q = min(n_q, 150 if not full else n_q)  # host queries are python-speed
+    rows = {}
+    for name in sorted(SYNTHETIC):
+        pts = dataset(name, n)
+        queries = queries_for(pts, n_q)
+        r = radius_for(pts)
+        row = {}
+        for algo in ("ballstar", "ball", "kd"):
+            tree, _ = build_timed(pts, algo)
+            visits = [
+                sh.constrained_knn(tree, q, k, r).nodes_visited
+                for q in queries
+            ]
+            row[algo] = float(np.mean(visits))
+            emit(
+                f"nodes_visited/{name}/{algo}",
+                0.0,
+                f"avg_nodes={row[algo]:.1f}",
+            )
+        rows[name] = row
+    return rows
+
+
+if __name__ == "__main__":
+    run()

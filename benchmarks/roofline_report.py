@@ -1,0 +1,63 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json produced by `repro.launch.dryrun` and
+prints the three roofline terms per (arch × shape × mesh), the dominant
+bottleneck, and the useful-FLOP ratio. Harmless no-op if the dry-run has
+not been executed yet."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9       # bytes/s / chip
+ICI_BW = 50e9        # bytes/s / link
+
+
+def terms(rec: dict) -> dict:
+    chips = rec["n_devices"]
+    t_comp = rec["total_flops"] / (chips * PEAK_FLOPS)
+    t_mem = rec["total_bytes"] / (chips * HBM_BW)
+    t_coll = rec["collective_bytes_total"] / (chips * ICI_BW)
+    dom = max(
+        ("compute", t_comp), ("memory", t_mem), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    out = {
+        "compute_s": t_comp,
+        "memory_s": t_mem,
+        "collective_s": t_coll,
+        "dominant": dom,
+    }
+    if rec.get("model_flops"):
+        out["useful_flop_ratio"] = rec["model_flops"] / max(
+            rec["total_flops"], 1.0
+        )
+    return out
+
+
+def run(full: bool = False):
+    if not ART.exists():
+        print("roofline,0.00,no_artifacts_yet_run_launch.dryrun")
+        return {}
+    rows = {}
+    for f in sorted(ART.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if "total_flops" not in rec:
+            continue
+        t = terms(rec)
+        rows[f.stem] = t
+        ratio = t.get("useful_flop_ratio")
+        print(
+            f"roofline/{f.stem},{t[t['dominant'] + '_s'] * 1e6:.0f},"
+            f"compute_s={t['compute_s']:.4f};memory_s={t['memory_s']:.4f};"
+            f"collective_s={t['collective_s']:.4f};dominant={t['dominant']}"
+            + (f";useful_flops={ratio:.2f}" if ratio else "")
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--full",
+        action="store_true",
+        help="paper scale (500k pts, 5300 queries); default is 50k/500",
+    )
+    ap.add_argument(
+        "--only",
+        default=None,
+        help="comma list: depth,nodes_visited,constrained_nn,search_time,"
+        "scalability,kernels,roofline",
+    )
+    args = ap.parse_args()
+
+    from . import (
+        constrained_nn,
+        depth,
+        kernels_bench,
+        nodes_visited,
+        roofline_report,
+        scalability,
+        search_time,
+    )
+
+    sections = {
+        "depth": depth.run,                      # Fig 5 + Table 1
+        "nodes_visited": nodes_visited.run,      # Fig 6
+        "constrained_nn": constrained_nn.run,    # Table 2
+        "search_time": search_time.run,          # Fig 7a
+        "scalability": scalability.run,          # Fig 7b
+        "kernels": kernels_bench.run,            # kernel rooflines
+        "roofline": roofline_report.run,         # dry-run roofline table
+    }
+    chosen = args.only.split(",") if args.only else list(sections)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in chosen:
+        try:
+            sections[name](full=args.full)
+        except Exception as e:  # keep the harness running; report failure
+            print(f"{name},0.00,ERROR:{type(e).__name__}:{e}", file=sys.stdout)
+    print(f"total,{(time.time() - t0) * 1e6:.0f},bench_wall_time")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Paper Fig 7b: search-time growth with dataset size (ball*-tree,
+constrained NN)."""
+from __future__ import annotations
+
+from repro.core import search_host as sh
+
+from .common import build_timed, dataset, emit, queries_for, radius_for, timed
+
+
+def run(full: bool = False, k: int = 10):
+    ns = [10_000, 25_000, 50_000, 100_000]
+    if full:
+        ns += [250_000, 500_000]
+    n_q = 60
+    rows = {}
+    for n in ns:
+        pts = dataset("highleyman", n)
+        queries = queries_for(pts, n_q)
+        r = radius_for(pts)
+        tree, build_s = build_timed(pts, "ballstar")
+
+        def run_host():
+            for q in queries:
+                sh.constrained_knn(tree, q, k, r)
+
+        _, dt = timed(run_host)
+        us = dt / n_q * 1e6
+        rows[n] = us
+        emit(f"scalability/n={n}", us, f"us_per_query;build_s={build_s:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

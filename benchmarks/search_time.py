@@ -1,0 +1,67 @@
+"""Paper Fig 7a: wall-clock search time, ball-tree vs ball*-tree (host
+reference), plus the batched jit path (the production TPU program,
+executing on CPU here) for throughput context."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import search_host as sh
+from repro.core import search_jax as sj
+
+from .common import (
+    SYNTHETIC,
+    build_timed,
+    dataset,
+    emit,
+    queries_for,
+    radius_for,
+    sizes,
+    timed,
+)
+
+
+def run(full: bool = False, k: int = 10):
+    n, n_q = sizes(full)
+    n_q_host = min(n_q, 100)
+    rows = {}
+    for name in sorted(SYNTHETIC):
+        pts = dataset(name, n)
+        queries = queries_for(pts, n_q)
+        r = radius_for(pts)
+        row = {}
+        for algo in ("ballstar", "ball"):
+            tree, _ = build_timed(pts, algo)
+
+            def run_host():
+                for q in queries[:n_q_host]:
+                    sh.constrained_knn(tree, q, k, r)
+
+            _, dt = timed(run_host)
+            row[algo] = dt / n_q_host * 1e6
+            emit(f"search_time/{name}/{algo}", row[algo], "host_us_per_query")
+            if algo == "ballstar":
+                dt_tree = sj.device_tree(tree)
+                stack = sj.max_depth(tree) + 3
+                qd = np.asarray(queries, np.float32)
+                _, dt1 = timed(
+                    lambda: sj.constrained_knn(
+                        dt_tree, qd, r, k, stack
+                    ).distances.block_until_ready()
+                )
+                _, dt2 = timed(
+                    lambda: sj.constrained_knn(
+                        dt_tree, qd, r, k, stack
+                    ).distances.block_until_ready()
+                )
+                row["jit"] = dt2 / len(queries) * 1e6
+                emit(
+                    f"search_time/{name}/jit_batch",
+                    row["jit"],
+                    f"us_per_query;compile_s={dt1 - dt2:.2f}",
+                )
+        rows[name] = row
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,15 @@
+# The paper's primary contribution: ball*-tree construction (PCA split +
+# F(t_c) threshold scan) and constrained-NN search, as both a faithful host
+# reference and a TPU-native vectorized/batched JAX implementation.
+from .types import Tree, TreeSpec  # noqa: F401
+from . import build_host, build_jax, search_host, search_jax, brute  # noqa: F401
+from .pca import first_component_host, first_component_exact  # noqa: F401
+
+
+def build(points, spec=None, backend: str = "host"):
+    """Build a tree with the requested backend ("host" | "jax")."""
+    if backend == "host":
+        return build_host.build(points, spec)
+    if backend == "jax":
+        return build_jax.build(points, spec)
+    raise ValueError(f"unknown backend {backend!r}")

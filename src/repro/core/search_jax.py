@@ -1,0 +1,187 @@
+"""Batched, jit-compiled tree search — the production TPU path.
+
+Queries are vmapped over an explicit-stack `lax.while_loop` traversal of
+the array-of-structs tree. The traversal order, pruning rules and node
+accounting replicate the host reference (`search_host`) exactly:
+
+  pop nearest-first DFS;  D_N = max(D_parent, |q-c| - radius);
+  prune when D_N >= D_s (KNN) OR D_N > r (range);
+  children pushed only if their ball intersects the range ball.
+
+`knn` is `constrained_knn` with r = inf (the range gates become no-ops),
+exactly as in the paper where constrained NN degenerates to Liu et al.'s
+algorithm for unbounded range.
+
+Note the DFS stack bound: each pop removes one entry and pushes at most
+two, and expansion only descends, so the stack never exceeds depth+2.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .types import Tree
+
+
+class DeviceTree(NamedTuple):
+    center: jax.Array      # (n_nodes, d)
+    radius: jax.Array      # (n_nodes,)
+    child_l: jax.Array     # (n_nodes,)
+    child_r: jax.Array     # (n_nodes,)
+    leaf_of_node: jax.Array  # (n_nodes,)
+    leaf_points: jax.Array   # (n_leaves, cap, d)
+    leaf_index: jax.Array    # (n_leaves, cap)
+
+
+def device_tree(tree: Tree, dtype=jnp.float32) -> DeviceTree:
+    return DeviceTree(
+        center=jnp.asarray(np.asarray(tree.center), dtype),
+        radius=jnp.asarray(np.asarray(tree.radius), dtype),
+        child_l=jnp.asarray(np.asarray(tree.child_l), jnp.int32),
+        child_r=jnp.asarray(np.asarray(tree.child_r), jnp.int32),
+        leaf_of_node=jnp.asarray(np.asarray(tree.leaf_of_node), jnp.int32),
+        leaf_points=jnp.asarray(np.asarray(tree.leaf_points), dtype),
+        leaf_index=jnp.asarray(np.asarray(tree.leaf_index), jnp.int32),
+    )
+
+
+def max_depth(tree: Tree) -> int:
+    return int(tree.leaf_depths().max())
+
+
+class KnnResult(NamedTuple):
+    indices: jax.Array    # (Q, k) original point ids, -1 = no result
+    distances: jax.Array  # (Q, k) inf where no result
+    nodes_visited: jax.Array  # (Q,)
+
+
+def _traverse_one(dt: DeviceTree, q, r, k: int, stack_size: int):
+    """Single-query constrained-KNN traversal (vmapped by callers)."""
+    inf = jnp.asarray(jnp.inf, dt.center.dtype)
+
+    stack_n = jnp.zeros(stack_size, jnp.int32)
+    stack_b = jnp.zeros(stack_size, dt.center.dtype)
+    best_d = jnp.full((k,), inf, dt.center.dtype)
+    best_i = jnp.full((k,), -1, jnp.int32)
+
+    def cond(state):
+        sp, *_ = state
+        return sp > 0
+
+    def body(state):
+        sp, stack_n, stack_b, best_d, best_i, visits = state
+        sp = sp - 1
+        node = stack_n[sp]
+        d_par = stack_b[sp]
+        visits = visits + 1
+
+        dc = jnp.linalg.norm(q - dt.center[node])
+        d_n = jnp.maximum(d_par, dc - dt.radius[node])
+        d_s = best_d[k - 1]
+        prune = (d_n >= d_s) | (d_n > r)
+        is_leaf = dt.child_l[node] < 0
+
+        # ---- leaf evaluation (masked; discarded unless leaf & !prune) ----
+        rank = jnp.maximum(dt.leaf_of_node[node], 0)
+        pts = dt.leaf_points[rank]            # (cap, d)
+        li = dt.leaf_index[rank]              # (cap,)
+        dl = jnp.sqrt(jnp.maximum(((pts - q) ** 2).sum(-1), 0.0))
+        ok = (li >= 0) & (dl <= r) & (dl < d_s)
+        dl = jnp.where(ok, dl, inf)
+        cand_d = jnp.concatenate([best_d, dl])
+        cand_i = jnp.concatenate([best_i, li])
+        order = jnp.argsort(cand_d)[:k]
+        new_d = cand_d[order]
+        new_i = cand_i[order]
+        take_leaf = is_leaf & ~prune
+        best_d = jnp.where(take_leaf, new_d, best_d)
+        best_i = jnp.where(take_leaf, new_i, best_i)
+
+        # ---- internal expansion ------------------------------------------
+        l = jnp.maximum(dt.child_l[node], 0)
+        rr = jnp.maximum(dt.child_r[node], 0)
+        dcl = jnp.linalg.norm(q - dt.center[l])
+        dcr = jnp.linalg.norm(q - dt.center[rr])
+        near, far = (
+            jnp.where(dcl <= dcr, l, rr),
+            jnp.where(dcl <= dcr, rr, l),
+        )
+        d_near = jnp.minimum(dcl, dcr)
+        d_far = jnp.maximum(dcl, dcr)
+        gate_near = d_near <= dt.radius[near] + r
+        gate_far = d_far <= dt.radius[far] + r
+        expand = ~is_leaf & ~prune
+        push_far = (expand & gate_far).astype(jnp.int32)
+        push_near = (expand & gate_near).astype(jnp.int32)
+        # push farther first so the nearer child is popped first
+        stack_n = stack_n.at[sp].set(
+            jnp.where(push_far == 1, far, stack_n[sp])
+        )
+        stack_b = stack_b.at[sp].set(
+            jnp.where(push_far == 1, d_n, stack_b[sp])
+        )
+        sp1 = sp + push_far
+        idx1 = jnp.minimum(sp1, stack_size - 1)
+        stack_n = stack_n.at[idx1].set(
+            jnp.where(push_near == 1, near, stack_n[idx1])
+        )
+        stack_b = stack_b.at[idx1].set(
+            jnp.where(push_near == 1, d_n, stack_b[idx1])
+        )
+        sp2 = sp1 + push_near
+        return (sp2, stack_n, stack_b, best_d, best_i, visits)
+
+    state = (
+        jnp.int32(1),
+        stack_n,
+        stack_b,
+        best_d,
+        best_i,
+        jnp.int32(0),
+    )
+    sp, _, _, best_d, best_i, visits = jax.lax.while_loop(cond, body, state)
+    return best_d, best_i, visits
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stack_size"))
+def constrained_knn(
+    dt: DeviceTree,
+    queries: jax.Array,   # (Q, d)
+    r,                    # scalar or (Q,)
+    k: int,
+    stack_size: int,
+) -> KnnResult:
+    r = jnp.broadcast_to(jnp.asarray(r, dt.center.dtype), queries.shape[:1])
+    fn = jax.vmap(
+        lambda q, ri: _traverse_one(dt, q, ri, k, stack_size)
+    )
+    best_d, best_i, visits = fn(queries, r)
+    return KnnResult(indices=best_i, distances=best_d, nodes_visited=visits)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stack_size"))
+def knn(dt: DeviceTree, queries: jax.Array, k: int, stack_size: int):
+    r = jnp.full(queries.shape[:1], jnp.inf, dt.center.dtype)
+    fn = jax.vmap(lambda q, ri: _traverse_one(dt, q, ri, k, stack_size))
+    best_d, best_i, visits = fn(queries, r)
+    return KnnResult(indices=best_i, distances=best_d, nodes_visited=visits)
+
+
+def search(
+    tree: Tree,
+    queries: np.ndarray,
+    k: int,
+    r: float | np.ndarray = np.inf,
+    dtype=jnp.float32,
+) -> KnnResult:
+    """Convenience wrapper: host tree in, jit-batched search out."""
+    dt = device_tree(tree, dtype)
+    stack_size = max_depth(tree) + 3
+    return constrained_knn(
+        dt, jnp.asarray(np.asarray(queries), dtype), r, k, stack_size
+    )

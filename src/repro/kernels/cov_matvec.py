@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: fused centered-covariance matvec for PCA power
+iteration — the construction-time hot-spot of ball*-tree (§3.2).
+
+One power-iteration step is y = Xcᵀ(Xc w) with Xc = X - μ. Materializing
+Xc (N×D) or the covariance (D×D) costs HBM traffic; instead we stream X
+through VMEM once per iteration and fuse centering, the row-space matvec
+t = Xc w, and the accumulation y += Xcᵀ t in a single pass:
+
+    grid = (N / bn,)
+    per step: xc = x_blk - μ; t = xc @ w  (bn,1); y += tᵀ @ xc  (1, D)
+
+The (1, D) output block is revisited across all grid steps (stays in
+VMEM), so HBM traffic is exactly N·D reads + D writes — the streaming
+minimum. Row masking makes arbitrary N exact under zero padding.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, mean_ref, w_ref, o_ref, *, bn: int, n: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)        # (bn, D)
+    mu = mean_ref[...].astype(jnp.float32)    # (1, D)
+    w = w_ref[...].astype(jnp.float32)        # (1, D)
+    row = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], 1), 0)
+    valid = (i * bn + row) < n                # (bn, 1)
+    xc = jnp.where(valid, x - mu, 0.0)
+    t = jax.lax.dot_general(
+        xc, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (bn, 1)
+    y = jax.lax.dot_general(
+        t, xc, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (1, D)
+    o_ref[...] += y
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def cov_matvec(
+    x: jax.Array,
+    mean: jax.Array,
+    w: jax.Array,
+    *,
+    bn: int = 1024,
+    interpret: bool = False,
+) -> jax.Array:
+    """y = (X-μ)ᵀ((X-μ)w). x: (N, D), mean/w: (D,) -> (D,) f32."""
+    n, d = x.shape
+    dp = _round_up(d, 128)
+    bn = min(bn, _round_up(n, 8))
+    np_ = _round_up(n, bn)
+    xpad = jnp.zeros((np_, dp), x.dtype).at[:n, :d].set(x)
+    mpad = jnp.zeros((1, dp), mean.dtype).at[0, :d].set(mean)
+    wpad = jnp.zeros((1, dp), w.dtype).at[0, :d].set(w)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bn=bn, n=n),
+        grid=(np_ // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, dp), lambda i: (i, 0)),
+            pl.BlockSpec((1, dp), lambda i: (0, 0)),
+            pl.BlockSpec((1, dp), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dp), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, dp), jnp.float32),
+        interpret=interpret,
+    )(xpad, mpad, wpad)
+    return out[0, :d]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

@@ -1,0 +1,57 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels run compiled; on CPU (this sandbox) they run in
+interpret mode, which executes the kernel body in Python — bit-for-bit
+the same program the TPU would trace. `interpret` is auto-detected.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import pairwise_l2 as _pw
+from . import cov_matvec as _cm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def pairwise_sq_l2(q, p, **kw):
+    """Blocked squared-L2 distance matrix (M, N) f32."""
+    kw.setdefault("interpret", _interpret())
+    return _pw.pairwise_sq_l2(q, p, **kw)
+
+
+def pairwise_l2(q, p, **kw):
+    """Euclidean distance matrix (M, N) f32."""
+    return jnp.sqrt(pairwise_sq_l2(q, p, **kw))
+
+
+def lower_bounds(q, centers, radii, **kw):
+    """Ball lower bounds max(0, ||q-c|| - radius): the pruning quantity
+    D_N of the paper's search (§4.2), batched over queries × nodes."""
+    d = pairwise_l2(q, centers, **kw)
+    return jnp.maximum(d - radii[None, :], 0.0)
+
+
+def cov_matvec(x, mean, w, **kw):
+    """Fused centered-covariance matvec (one power-iteration step)."""
+    kw.setdefault("interpret", _interpret())
+    return _cm.cov_matvec(x, mean, w, **kw)
+
+
+def power_iteration(x, iters: int = 16, **kw):
+    """First principal component of x (N, D) using the fused kernel."""
+    n, d = x.shape
+    mean = x.mean(axis=0)
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (d,), jnp.float32)
+    w = w / jnp.linalg.norm(w)
+
+    def body(_, w):
+        v = cov_matvec(x, mean, w, **kw)
+        nrm = jnp.linalg.norm(v)
+        return jnp.where(nrm > 1e-12, v / jnp.maximum(nrm, 1e-30), w)
+
+    return jax.lax.fori_loop(0, iters, body, w)

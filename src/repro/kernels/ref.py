@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness references)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_l2(q: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
+    """Squared euclidean distances, direct O(M*N*D) formulation.
+
+    q: (M, D), p: (N, D) -> (M, N) float32.
+    """
+    q = q.astype(jnp.float32)
+    p = p.astype(jnp.float32)
+    diff = q[:, None, :] - p[None, :, :]
+    return (diff * diff).sum(-1)
+
+
+def cov_matvec(x: jnp.ndarray, mean: jnp.ndarray, w: jnp.ndarray):
+    """One centered-covariance power-iteration step: y = Xcᵀ (Xc w).
+
+    x: (N, D), mean: (D,), w: (D,) -> (D,) float32 (unnormalized).
+    """
+    xc = x.astype(jnp.float32) - mean.astype(jnp.float32)[None, :]
+    t = xc @ w.astype(jnp.float32)
+    return xc.T @ t

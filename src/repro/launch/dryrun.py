@@ -1,0 +1,240 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+single-pod 16×16 mesh and the 2×16×16 multi-pod mesh, proving the
+sharding config is coherent, and record the roofline inputs
+(while-aware FLOPs / HBM bytes / collective bytes, memory analysis)
+into artifacts/dryrun/*.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
+(--all spawns one subprocess per cell for compile-memory isolation.)
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+import traceback
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+PEAK_FLOPS = 197e12  # bf16 / v5e chip
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def cell_path(arch: str, shape: str, mesh: str) -> pathlib.Path:
+    safe = arch.replace(".", "_")
+    return ART / f"{safe}__{shape}__{mesh}.json"
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get
+    from repro.configs.shapes import SHAPES, applicable
+    from repro.launch import hlo, specs
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import model as model_lib
+    from repro.models.sharding import axis_rules, serve_rules, train_rules
+    from repro.train import optimizer as opt_lib
+    from repro.train.step import make_train_step
+
+    cfg = get(arch)
+    # perf-iteration knobs without code edits, e.g.
+    #   REPRO_OVERRIDES="flash_backward=1,causal_packing=0,attn_chunk=512"
+    overrides = os.environ.get("REPRO_OVERRIDES", "")
+    if overrides:
+        import dataclasses
+
+        kv = {}
+        for item in overrides.split(","):
+            key, val = item.split("=")
+            cur = getattr(cfg, key)
+            kv[key] = type(cur)(int(val)) if not isinstance(cur, str) else val
+        cfg = dataclasses.replace(cfg, **kv)
+    shape = SHAPES[shape_name]
+    ok, why = applicable(cfg, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "skipped": True, "reason": why}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = int(mesh.devices.size)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "n_devices": n_dev, "kind": shape.kind,
+        "seq": shape.seq, "batch": shape.batch,
+        "overrides": overrides,
+    }
+
+    t0 = time.time()
+    if shape.kind == "train":
+        rules = train_rules(mesh)
+        params = specs.param_specs(cfg, rules)
+        opt = specs.opt_specs(params)
+        batch = specs.batch_specs(cfg, shape, rules)
+        step_fn = make_train_step(cfg, opt_lib.AdamWConfig())
+        with axis_rules(rules):
+            lowered = jax.jit(step_fn, donate_argnums=(0, 1)).lower(
+                params, opt, batch
+            )
+    elif shape.kind == "prefill":
+        rules = serve_rules(mesh)
+        params = specs.param_specs(cfg, rules)
+        batch = specs.batch_specs(cfg, shape, rules)
+
+        def prefill_fn(values, tokens):
+            return model_lib.prefill(values, tokens, cfg, cache_len=shape.seq)
+
+        with axis_rules(rules):
+            lowered = jax.jit(prefill_fn).lower(params, batch["inputs"])
+    else:  # decode
+        rules = serve_rules(mesh)
+        params = specs.param_specs(cfg, rules)
+        cache = specs.cache_specs(cfg, shape, rules)
+        tok, pos = specs.decode_token_specs(cfg, shape, rules)
+
+        def decode_fn(values, cache, tokens, pos):
+            return model_lib.decode_step(values, cache, tokens, pos, cfg)
+
+        with axis_rules(rules):
+            lowered = jax.jit(decode_fn, donate_argnums=(1,)).lower(
+                params, cache, tok, pos
+            )
+    rec["lower_s"] = round(time.time() - t0, 2)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    # ---- roofline inputs ------------------------------------------------- #
+    ca = compiled.cost_analysis() or {}
+    rec["xla_cost_flops_per_device"] = float(ca.get("flops", -1.0))
+    txt = compiled.as_text()
+    cost = hlo.analyze(txt)
+    rec["flops_per_device"] = cost.flops
+    rec["hbm_bytes_per_device"] = cost.hbm_bytes
+    rec["collective_bytes_per_device"] = dict(cost.collective_bytes)
+    rec["collective_bytes_per_device_total"] = cost.collective_total
+    rec["total_flops"] = cost.flops * n_dev
+    rec["total_bytes"] = cost.hbm_bytes * n_dev
+    rec["collective_bytes_total"] = cost.collective_total * n_dev
+    rec["hlo_bytes"] = len(txt)
+
+    # save compiled HLO for offline re-analysis / per-op attribution
+    import gzip
+
+    hlo_dir = ART.parent / "hlo"
+    hlo_dir.mkdir(parents=True, exist_ok=True)
+    safe = arch.replace(".", "_")
+    with gzip.open(hlo_dir / f"{safe}__{shape_name}__{mesh_kind}.txt.gz", "wt") as f:
+        f.write(txt)
+
+    ma = compiled.memory_analysis()
+    for field in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    ):
+        rec[field] = int(getattr(ma, field, -1)) if ma else -1
+
+    # model flops: 6·N_active·D train; 2·N_active·D inference
+    n_active = model_lib.active_param_count(cfg)
+    n_total = model_lib.param_count(cfg)
+    tokens = shape.batch * (shape.seq if shape.kind in ("train", "prefill") else 1)
+    factor = 6 if shape.kind == "train" else 2
+    rec["params_total"] = n_total
+    rec["params_active"] = n_active
+    rec["tokens_per_step"] = tokens
+    rec["model_flops"] = float(factor * n_active * tokens)
+
+    # roofline terms (single-pod numbers are the table of record)
+    rec["t_compute_s"] = rec["total_flops"] / (n_dev * PEAK_FLOPS)
+    rec["t_memory_s"] = rec["total_bytes"] / (n_dev * HBM_BW)
+    rec["t_collective_s"] = rec["collective_bytes_total"] / (n_dev * ICI_BW)
+    dom = max(
+        ("compute", rec["t_compute_s"]),
+        ("memory", rec["t_memory_s"]),
+        ("collective", rec["t_collective_s"]),
+        key=lambda kv: kv[1],
+    )
+    rec["dominant"] = dom[0]
+    rec["useful_flop_ratio"] = rec["model_flops"] / max(rec["total_flops"], 1.0)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--timeout", type=int, default=2400)
+    args = ap.parse_args()
+    ART.mkdir(parents=True, exist_ok=True)
+
+    if args.all:
+        from repro.configs import ARCH_IDS
+        from repro.configs.shapes import SHAPES
+
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        cells = [
+            (a, s, m)
+            for a in ARCH_IDS
+            for s in SHAPES
+            for m in meshes
+        ]
+        failures = 0
+        for a, s, m in cells:
+            out = cell_path(a, s, m)
+            if args.skip_existing and out.exists():
+                print(f"[skip] {a} {s} {m}", flush=True)
+                continue
+            t0 = time.time()
+            proc = subprocess.run(
+                [sys.executable, "-m", "repro.launch.dryrun",
+                 "--arch", a, "--shape", s, "--mesh", m],
+                capture_output=True, text=True, timeout=args.timeout + 120,
+                env={**os.environ, "PYTHONPATH": "src"},
+            )
+            status = "ok" if proc.returncode == 0 else "FAIL"
+            if proc.returncode != 0:
+                failures += 1
+                out.write_text(json.dumps({
+                    "arch": a, "shape": s, "mesh": m, "error": True,
+                    "stderr": proc.stderr[-4000:],
+                }, indent=1))
+            print(f"[{status}] {a} {s} {m} ({time.time()-t0:.0f}s)", flush=True)
+        print(f"done, failures={failures}")
+        sys.exit(1 if failures else 0)
+
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh)
+    except Exception:
+        rec = {"arch": args.arch, "shape": args.shape, "mesh": args.mesh,
+               "error": True, "stderr": traceback.format_exc()[-4000:]}
+        cell_path(args.arch, args.shape, args.mesh).write_text(
+            json.dumps(rec, indent=1)
+        )
+        print(json.dumps(rec, indent=1))
+        sys.exit(1)
+    cell_path(args.arch, args.shape, args.mesh).write_text(
+        json.dumps(rec, indent=1)
+    )
+    # print the proof artifacts the assignment asks for
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

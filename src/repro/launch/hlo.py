@@ -1,0 +1,487 @@
+"""While-aware static analyzer for compiled HLO text.
+
+XLA's HloCostAnalysis (what compiled.cost_analysis() exposes) counts a
+while-loop body ONCE — but our models scan over layers, so per-layer
+FLOPs, HBM bytes and collective bytes must be multiplied by the scan
+trip count. This module parses compiled.as_text() into a computation
+graph, extracts loop trip counts from the loop-condition compare, and
+rolls up:
+
+  flops            dot ops: 2 * prod(result dims) * prod(contraction),
+                   plus 1 flop/element for elementwise arithmetic
+  hbm_bytes        post-fusion traffic model: operand + result bytes of
+                   every top-level (non-fused-subcomputation) instruction
+  collective_bytes operand bytes of all-reduce / all-gather /
+                   reduce-scatter / all-to-all / collective-permute
+                   (async -start counted, -done skipped)
+
+all multiplied through while(trip) and call/fusion edges from ENTRY.
+Validated against unrolled references in tests/test_hlo_analyzer.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f4e2m1fn": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.-]+)\s*=\s*"          # name
+    r"((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?))\s+"  # type
+    r"([a-z][\w-]*)"                                  # opcode
+    r"\((.*)$"                                        # args + attrs
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.-]+)\s+(?:\([^)]*\))?.*\{\s*$")
+
+ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "exponential", "log", "rsqrt", "sqrt", "tanh", "negate", "abs",
+    "power", "select", "compare", "convert", "and", "or", "xor",
+    "exponential-minus-one", "log-plus-one", "sign", "floor", "ceil",
+    "cosine", "sine", "logistic",
+}
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _bytes_of_type(t: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(t):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _elements_of_type(t: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(t):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _dims_of_type(t: str) -> List[int]:
+    m = _SHAPE_RE.search(t)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type: str
+    opcode: str
+    rest: str  # args + attributes
+
+    def operands(self) -> List[str]:
+        depth = 0
+        for i, ch in enumerate(self.rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    args = self.rest[:i]
+                    break
+                depth -= 1
+        else:
+            args = self.rest
+        return [t.lstrip("%") for t in re.findall(r"%?([\w.-]+)", args)]
+
+    def attr(self, key: str) -> Optional[str]:
+        m = re.search(rf"{key}=%?([\w.-]+)", self.rest)
+        return m.group(1) if m else None
+
+    def int_list_attr(self, key: str) -> List[int]:
+        m = re.search(rf"{key}={{([0-9, ]*)}}", self.rest)
+        if not m or not m.group(1).strip():
+            return []
+        return [int(x) for x in m.group(1).split(",")]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+
+
+def parse(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            # computation headers end in "{" and carry a "-> result" type;
+            # they may contain /*index=N*/ comments, so don't reject on "="
+            if line.rstrip().endswith("{") and (
+                " -> " in line or line.startswith("ENTRY")
+            ):
+                m = _COMP_RE.match(line)
+                if m:
+                    cur = Computation(m.group(1), [])
+                    if line.startswith("ENTRY"):
+                        entry = cur.name
+                continue
+        else:
+            if line.strip() == "}":
+                comps[cur.name] = cur
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                cur.instrs.append(Instr(*m.groups()))
+    if entry is None and comps:
+        entry = max(comps, key=lambda c: len(comps[c].instrs))
+    return comps, entry
+
+
+def _trip_count_from_backend_config(ins: Instr) -> Optional[int]:
+    """XLA annotates canonical loops: backend_config={"known_trip_count":
+    {"n":"8"}, ...} — the authoritative source."""
+    m = re.search(r'known_trip_count[^0-9]*"n"\s*:\s*"?(\d+)', ins.rest)
+    return int(m.group(1)) if m else None
+
+
+def _trip_count(cond: Computation, comps: Dict[str, "Computation"]) -> int:
+    """Fallback: find compare(iter, constant) with direction LT/LE in the
+    condition computation (possibly behind a fusion)."""
+    consts = {}
+    for ins in cond.instrs:
+        if ins.opcode == "constant":
+            m = re.match(r"([-0-9]+)\)", ins.rest)
+            if m:
+                consts[ins.name] = int(m.group(1))
+
+    def scan_comp(comp: Computation, const_args: List[Optional[int]]):
+        for ins in comp.instrs:
+            if ins.opcode == "compare":
+                for o in ins.operands():
+                    if o in consts:
+                        b = consts[o]
+                        return b + 1 if "direction=LE" in ins.rest else b
+                    m = re.match(r"param_(?:\w+\.)?(\d+)", o)
+                    if m and const_args:
+                        idx = int(m.group(1))
+                        if idx < len(const_args) and const_args[idx] is not None:
+                            b = const_args[idx]
+                            return (
+                                b + 1 if "direction=LE" in ins.rest else b
+                            )
+            if ins.opcode == "fusion":
+                sub = ins.attr("calls")
+                if sub in comps:
+                    args = [consts.get(o) for o in ins.operands()]
+                    r = scan_comp(comps[sub], args)
+                    if r:
+                        return r
+        return None
+
+    r = scan_comp(cond, [])
+    return max(1, r) if r else 1
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=dict
+    )
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = (
+                self.collective_bytes.get(k, 0.0) + v * mult
+            )
+
+    @property
+    def collective_total(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+class Analyzer:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse(text)
+        self.types: Dict[str, str] = {}
+        for comp in self.comps.values():
+            for ins in comp.instrs:
+                self.types[ins.name] = ins.type
+        self._memo: Dict[Tuple[str, bool], Cost] = {}
+
+    # ------------------------------------------------------------------ #
+    def _dot_flops(self, ins: Instr) -> float:
+        out_elems = _elements_of_type(ins.type)
+        contracting = ins.int_list_attr("lhs_contracting_dims")
+        ops = [o for o in ins.operands() if o in self.types]
+        if not ops:
+            return 0.0
+        lhs_dims = _dims_of_type(self.types[ops[0]])
+        k = 1
+        for ci in contracting:
+            if ci < len(lhs_dims):
+                k *= lhs_dims[ci]
+        return 2.0 * out_elems * max(k, 1)
+
+    def _instr_cost(self, ins: Instr, top_level: bool) -> Cost:
+        c = Cost()
+        op = ins.opcode
+        if op == "dot":
+            c.flops = self._dot_flops(ins)
+        elif op in ELEMENTWISE:
+            c.flops = float(_elements_of_type(ins.type))
+        elif op == "reduce":
+            # ~1 flop per input element
+            ops = [o for o in ins.operands() if o in self.types]
+            c.flops = float(
+                sum(_elements_of_type(self.types[o]) for o in ops[:1])
+            )
+        # collective bytes: operand sizes (async start counted once)
+        base = op[:-6] if op.endswith("-start") else op
+        if base in COLLECTIVES and not op.endswith("-done"):
+            ops = [o for o in ins.operands() if o in self.types]
+            nbytes = sum(_bytes_of_type(self.types[o]) for o in ops)
+            if nbytes == 0:
+                nbytes = _bytes_of_type(ins.type)
+            c.collective_bytes[base] = (
+                c.collective_bytes.get(base, 0.0) + nbytes
+            )
+        # HBM traffic model: top-level instruction bytes moved.
+        # - slicing ops touch only the slice, not the full operand
+        # - dynamic-update-slice is an in-place region write
+        # - everything else reads operands once and writes its result
+        # Pure GTE/tuple/param/const/bitcast are free.
+        if top_level:
+            if op in ("dynamic-slice", "slice", "broadcast", "iota",
+                      "reshape", "gather"):
+                c.hbm_bytes = 2.0 * _bytes_of_type(ins.type)
+            elif op == "dynamic-update-slice":
+                ops = [o for o in ins.operands() if o in self.types]
+                upd = (
+                    _bytes_of_type(self.types[ops[1]])
+                    if len(ops) > 1
+                    else _bytes_of_type(ins.type)
+                )
+                c.hbm_bytes = 2.0 * upd
+            elif op == "fusion":
+                c.hbm_bytes = self._fusion_bytes(ins)
+            elif op not in (
+                "tuple", "get-tuple-element", "parameter", "constant",
+                "after-all", "bitcast",
+            ):
+                ops = [o for o in ins.operands() if o in self.types]
+                c.hbm_bytes = float(
+                    _bytes_of_type(ins.type)
+                    + sum(_bytes_of_type(self.types[o]) for o in ops)
+                )
+        return c
+
+    def _fusion_bytes(self, ins: Instr) -> float:
+        """Fusion traffic: result + effective operand bytes. An operand
+        whose every in-fusion use is a slice/dynamic-slice/gather only
+        touches the sliced bytes, not the whole array (the loop-carried
+        KV/weight-stack pattern)."""
+        total = float(_bytes_of_type(ins.type))
+        sub = self.comps.get(ins.attr("calls") or "")
+        ops = ins.operands()
+        param_of: Dict[int, str] = {}
+        uses: Dict[str, List[Instr]] = {}
+        if sub is not None:
+            for i2 in sub.instrs:
+                if i2.opcode == "parameter":
+                    m = re.match(r"(\d+)\)", i2.rest)
+                    if m:
+                        param_of[int(m.group(1))] = i2.name
+            for i2 in sub.instrs:
+                for o in i2.operands():
+                    uses.setdefault(o, []).append(i2)
+        for idx, o in enumerate(ops):
+            if o not in self.types:
+                continue
+            full = _bytes_of_type(self.types[o])
+            pname = param_of.get(idx)
+            if pname and pname in uses:
+                slicing = [
+                    u
+                    for u in uses[pname]
+                    if u.opcode in ("dynamic-slice", "slice", "gather")
+                ]
+                if slicing and len(slicing) == len(uses[pname]):
+                    full = min(
+                        full,
+                        float(
+                            sum(_bytes_of_type(u.type) for u in slicing)
+                        ),
+                    )
+            total += full
+        return total
+
+    def comp_cost(self, name: str, top_level: bool = True) -> Cost:
+        key = (name, top_level)
+        if key in self._memo:
+            return self._memo[key]
+        total = Cost()
+        comp = self.comps.get(name)
+        if comp is None:
+            return total
+        for ins in comp.instrs:
+            total.add(self._instr_cost(ins, top_level))
+            if ins.opcode == "while":
+                body = ins.attr("body")
+                cond = ins.attr("condition")
+                trip = _trip_count_from_backend_config(ins)
+                if trip is None:
+                    trip = (
+                        _trip_count(self.comps[cond], self.comps)
+                        if cond in self.comps
+                        else 1
+                    )
+                if body in self.comps:
+                    total.add(self.comp_cost(body, top_level), trip)
+                if cond in self.comps:
+                    total.add(self.comp_cost(cond, False), trip)
+            elif ins.opcode == "fusion":
+                sub = ins.attr("calls")
+                if sub in self.comps:
+                    # fused subcomputation: flops count, bytes do not
+                    total.add(self.comp_cost(sub, False))
+            elif ins.opcode in ("call", "async-start"):
+                sub = ins.attr("to_apply") or ins.attr("calls")
+                if sub in self.comps:
+                    total.add(self.comp_cost(sub, top_level))
+            elif ins.opcode == "conditional":
+                for m in re.finditer(r"branch_computations=\{([^}]*)\}", ins.rest):
+                    names = [x.strip().lstrip("%") for x in m.group(1).split(",")]
+                    subs = [self.comp_cost(n, top_level) for n in names if n in self.comps]
+                    if subs:  # worst-case branch
+                        total.add(max(subs, key=lambda s: s.flops))
+                m2 = re.search(r"true_computation=%?([\w.-]+)", ins.rest)
+                if m2 and m2.group(1) in self.comps:
+                    total.add(self.comp_cost(m2.group(1), top_level))
+                m3 = re.search(r"false_computation=%?([\w.-]+)", ins.rest)
+                if m3 and m3.group(1) in self.comps:
+                    total.add(self.comp_cost(m3.group(1), top_level))
+        self._memo[key] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        return self.comp_cost(self.entry, True)
+
+
+def analyze(text: str) -> Cost:
+    return Analyzer(text).entry_cost()
+
+
+# ===================================================================== #
+# attribution: roll flops/bytes up by jax op_name metadata
+# ===================================================================== #
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _tag_of(ins: Instr) -> str:
+    m = _OPNAME_RE.search(ins.rest)
+    if not m:
+        return "<none>"
+    name = m.group(1)
+    # strip jit wrapper + loop scaffolding; keep the semantic tail
+    parts = [
+        p
+        for p in name.split("/")
+        if p
+        and not p.startswith("jit(")
+        and p not in ("jvp()", "while", "body", "closed_call", "checkpoint",
+                      "rematted_computation", "cond", "transpose(jvp())")
+    ]
+    return "/".join(parts[-2:]) if parts else name
+
+
+class Attribution(Analyzer):
+    """Analyzer that also attributes flops / hbm bytes / collective bytes
+    to jax op_name tags (while-trip multiplied) — the dry-run 'profile'."""
+
+    def __init__(self, text: str):
+        super().__init__(text)
+        self.flops_by: Dict[str, float] = {}
+        self.bytes_by: Dict[str, float] = {}
+        self.coll_by: Dict[str, float] = {}
+        self._attr_memo: Dict[Tuple[str, bool], List] = {}
+
+    def _comp_contribs(self, name: str, top_level: bool):
+        key = (name, top_level)
+        if key in self._attr_memo:
+            return self._attr_memo[key]
+        out = []
+        comp = self.comps.get(name)
+        if comp is None:
+            return out
+        for ins in comp.instrs:
+            c = self._instr_cost(ins, top_level)
+            if ins.opcode == "fusion" and top_level:
+                c.hbm_bytes = self._fusion_bytes(ins)
+            tag = _tag_of(ins)
+            if c.flops or c.hbm_bytes or c.collective_bytes:
+                out.append((tag, c, 1.0))
+            if ins.opcode == "while":
+                body, cond = ins.attr("body"), ins.attr("condition")
+                trip = _trip_count_from_backend_config(ins)
+                if trip is None:
+                    trip = (
+                        _trip_count(self.comps[cond], self.comps)
+                        if cond in self.comps else 1
+                    )
+                for t, cc, m in self._comp_contribs(body, top_level):
+                    out.append((t, cc, m * trip))
+            elif ins.opcode == "fusion":
+                sub = ins.attr("calls")
+                for t, cc, m in self._comp_contribs(sub, False):
+                    out.append((t, cc, m))
+            elif ins.opcode in ("call", "async-start"):
+                sub = ins.attr("to_apply") or ins.attr("calls")
+                for t, cc, m in self._comp_contribs(sub, top_level):
+                    out.append((t, cc, m))
+        self._attr_memo[key] = out
+        return out
+
+    def attribute(self):
+        for tag, c, mult in self._comp_contribs(self.entry, True):
+            if c.flops:
+                self.flops_by[tag] = self.flops_by.get(tag, 0.0) + c.flops * mult
+            if c.hbm_bytes:
+                self.bytes_by[tag] = self.bytes_by.get(tag, 0.0) + c.hbm_bytes * mult
+            ct = c.collective_total
+            if ct:
+                self.coll_by[tag] = self.coll_by.get(tag, 0.0) + ct * mult
+        return self
+
+    def top(self, table: Dict[str, float], n: int = 15):
+        return sorted(table.items(), key=lambda kv: -kv[1])[:n]
+
+
+def profile(text: str, n: int = 15) -> Dict[str, list]:
+    a = Attribution(text).attribute()
+    return {
+        "flops": a.top(a.flops_by, n),
+        "hbm_bytes": a.top(a.bytes_by, n),
+        "collective_bytes": a.top(a.coll_by, n),
+    }

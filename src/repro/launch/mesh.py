@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state. The dry-run process sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE importing
+jax; everything else (tests, benches) sees the default 1 CPU device.
+
+Topology: one v5e pod slice = 16x16 = 256 chips, meshed as
+(data=16, model=16). Multi-pod adds a leading "pod" axis (2x16x16=512):
+batch is sharded over (pod, data); params are FSDP-sharded within a pod
+only (the pod axis carries gradient all-reduce over DCN, not per-layer
+param all-gathers).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} exist; "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (launch/dryrun.py does this)"
+        )
+    return Mesh(np.array(devices[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Tiny mesh over whatever devices exist (tests)."""
+    n = data * model
+    devices = jax.devices()
+    assert len(devices) >= n, (len(devices), n)
+    return Mesh(np.array(devices[:n]).reshape(data, model), ("data", "model"))

@@ -1,0 +1,121 @@
+"""Roofline reporting: read artifacts/dryrun/*.json into the
+EXPERIMENTS.md §Dry-run and §Roofline tables.
+
+  python -m repro.launch.roofline [--mesh single] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, List
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str = "single") -> List[dict]:
+    recs = []
+    for f in sorted(ART.glob(f"*__{mesh}.json")):
+        recs.append(json.loads(f.read_text()))
+    recs.sort(
+        key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]))
+        if r["shape"] in SHAPE_ORDER
+        else (r["arch"], 99)
+    )
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def dryrun_table(recs: List[dict]) -> str:
+    out = [
+        "| arch | shape | compile | bytes/dev (arg+tmp) | FLOPs/dev | "
+        "coll. bytes/dev | collectives |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("skipped"):
+            out.append(
+                f"| {r['arch']} | {r['shape']} | SKIP | — | — | — | "
+                f"{r['reason'][:60]} |"
+            )
+            continue
+        if r.get("error"):
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | |")
+            continue
+        coll = r.get("collective_bytes_per_device", {})
+        ctypes = ",".join(
+            f"{k.split('-')[-1] if False else k}:{v / 1e9:.2f}GB"
+            for k, v in sorted(coll.items(), key=lambda kv: -kv[1])[:3]
+        )
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']:.0f}s | "
+            f"{(r['argument_size_in_bytes']) / 1e9:.2f}+"
+            f"{r['temp_size_in_bytes'] / 1e9:.2f}GB | "
+            f"{r['flops_per_device'] / 1e12:.2f}T | "
+            f"{r['collective_bytes_per_device_total'] / 1e9:.2f}GB | "
+            f"{ctypes} |"
+        )
+    return "\n".join(out)
+
+
+def roofline_table(recs: List[dict]) -> str:
+    out = [
+        "| arch | shape | t_compute | t_memory | t_collective | dominant | "
+        "MODEL_FLOPS | useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("skipped") or r.get("error"):
+            continue
+        t = [r["t_compute_s"], r["t_memory_s"], r["t_collective_s"]]
+        bound = max(t)
+        # roofline fraction: useful-compute time / bound time — how close
+        # the program is to the ideal all-useful-compute execution
+        ideal = r["model_flops"] / (r["n_devices"] * 197e12)
+        frac = ideal / bound if bound > 0 else 0.0
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(t[0])} | {fmt_s(t[1])} | "
+            f"{fmt_s(t[2])} | **{r['dominant']}** | "
+            f"{r['model_flops'] / 1e12:.0f}T | "
+            f"{r['useful_flop_ratio']:.2f} | {frac:.3f} |"
+        )
+    return "\n".join(out)
+
+
+def pick_hillclimb(recs: List[dict]) -> List[dict]:
+    """worst roofline fraction / most collective-bound / most
+    paper-representative (the MoE+MLA train cell)."""
+    live = [r for r in recs if not r.get("skipped") and not r.get("error")]
+
+    def frac(r):
+        bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        return r["model_flops"] / (r["n_devices"] * 197e12) / bound
+
+    worst = min(live, key=frac)
+    coll = max(live, key=lambda r: r["t_collective_s"] / max(
+        r["t_compute_s"], r["t_memory_s"], 1e-12))
+    return [worst, coll]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    recs = load(args.mesh)
+    print("## Dry-run (mesh =", args.mesh, ")\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

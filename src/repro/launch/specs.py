@@ -1,0 +1,85 @@
+"""Abstract input specs (ShapeDtypeStruct + NamedSharding) for every
+(arch × shape × mesh) cell — the shannon/kernels pattern: weak-type
+correct, shardable, zero device allocation."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import SHAPES, Shape
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import COMPUTE_DTYPE
+from repro.models.sharding import Rules
+
+
+def _sds(shape, dtype, rules: Rules, spec):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=rules.sharding(shape, spec)
+    )
+
+
+def shardings_for(values, specs, rules: Rules):
+    """Parallel (values, logical-spec) trees -> NamedSharding tree."""
+    flat_v, treedef = jax.tree.flatten(values)
+    flat_s, _ = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    assert len(flat_v) == len(flat_s)
+    return jax.tree.unflatten(
+        treedef,
+        [rules.sharding(v.shape, s) for v, s in zip(flat_v, flat_s)],
+    )
+
+
+def param_specs(cfg: ModelConfig, rules: Rules):
+    values, specs = model_lib.abstract_params(cfg)
+    sh = shardings_for(values, specs, rules)
+    return jax.tree.map(
+        lambda v, s: jax.ShapeDtypeStruct(v.shape, v.dtype, sharding=s),
+        values,
+        sh,
+    )
+
+
+def opt_specs(params_sds):
+    return {
+        "m": params_sds,
+        "v": params_sds,
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def batch_specs(cfg: ModelConfig, shape: Shape, rules: Rules):
+    B, S = shape.batch, shape.seq
+    if cfg.frontend == "tokens":
+        inputs = _sds((B, S), jnp.int32, rules, ("batch", None))
+    else:
+        inputs = _sds(
+            (B, S, cfg.d_model), COMPUTE_DTYPE, rules, ("batch", None, None)
+        )
+    labels = _sds((B, S), jnp.int32, rules, ("batch", None))
+    return {"inputs": inputs, "labels": labels}
+
+
+def cache_specs(cfg: ModelConfig, shape: Shape, rules: Rules):
+    shapes = model_lib.cache_shapes(cfg, shape.batch, shape.seq)
+    return jax.tree.map(
+        lambda t: _sds(t[0], t[2], rules, t[1]),
+        shapes,
+        is_leaf=lambda t: isinstance(t, tuple) and isinstance(t[0], tuple),
+    )
+
+
+def decode_token_specs(cfg: ModelConfig, shape: Shape, rules: Rules):
+    B = shape.batch
+    if cfg.frontend == "tokens":
+        tok = _sds((B, 1), jnp.int32, rules, ("batch", None))
+    else:
+        tok = _sds(
+            (B, 1, cfg.d_model), COMPUTE_DTYPE, rules, ("batch", None, None)
+        )
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return tok, pos

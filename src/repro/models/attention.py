@@ -1,0 +1,449 @@
+"""Attention mixers: GQA (optional sliding window, QKV bias) and MLA
+(DeepSeek multi-head latent attention), with flash-style chunked causal
+attention for train/prefill and cache-based single-token decode.
+
+Chunked causal attention never materializes the S×S score matrix: the
+(q-chunk, kv-chunk) pairs are enumerated STATICALLY and processed by one
+lax.scan with online-softmax state. With `packing=True` only the lower
+triangle (and, under a sliding window, only chunks overlapping the
+window) is visited — zero FLOPs on fully-masked blocks. `packing=False`
+is the naive full-grid baseline kept for the §Perf before/after.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (
+    COMPUTE_DTYPE,
+    Param,
+    apply_rope,
+    fanin,
+    matmul,
+    rms_norm,
+    zeros,
+)
+from .sharding import constrain
+
+NEG_INF = -1e30
+
+
+# ===================================================================== #
+# chunked causal core
+# ===================================================================== #
+def _pair_schedule(R: int, C: int, window: int, packing: bool):
+    """Static (q-chunk, kv-chunk) visit schedule, row-major."""
+    pairs = []
+    for i in range(R):
+        if packing:
+            j_min = 0
+            if window:
+                lowest = i * C - (window - 1)  # lowest visible k position
+                j_min = max(0, lowest // C)
+            js = range(j_min, i + 1)
+        else:
+            js = range(R)
+        for j in js:
+            pairs.append((i, j))
+    qi = np.asarray([p[0] for p in pairs], np.int32)
+    kj = np.asarray([p[1] for p in pairs], np.int32)
+    is_start = np.zeros(len(pairs), bool)
+    is_start[0] = True
+    is_start[1:] = qi[1:] != qi[:-1]
+    return qi, kj, is_start
+
+
+def chunked_causal(
+    q: jax.Array,  # (B, S, KV, G, hd)
+    k: jax.Array,  # (B, S, KV, hd)
+    v: jax.Array,  # (B, S, KV, hdv)
+    *,
+    chunk: int,
+    window: int = 0,
+    packing: bool = True,
+    scale: Optional[float] = None,
+    flash: bool = False,
+) -> jax.Array:  # (B, S, KV, G, hdv)
+    B, S, KV, G, hd = q.shape
+    hdv = v.shape[-1]
+    C = min(chunk, S)
+    S_real = S
+    if S % C:  # pad to a chunk multiple; causal mask hides padded keys
+        pad = C - S % C
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S = S + pad
+    R = S // C
+    scale = scale or hd ** -0.5
+    if flash:
+        from .flash_vjp import flash_causal
+
+        out = flash_causal(q, k, v, C, window, packing, scale)
+        return out[:, :S_real]
+    qi, kj, is_start = _pair_schedule(R, C, window, packing)
+
+    out0 = jnp.zeros((B, S, KV, G, hdv), COMPUTE_DTYPE)
+    m0 = jnp.full((B, KV, G, C), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, C), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, C, hdv), jnp.float32)
+
+    def step(carry, xs):
+        out, m, l, acc = carry
+        i, j, start = xs
+        m = jnp.where(start, NEG_INF, m)
+        l = jnp.where(start, 0.0, l)
+        acc = jnp.where(start, 0.0, acc)
+
+        qc = jax.lax.dynamic_slice_in_dim(q, i * C, C, axis=1)
+        kc = jax.lax.dynamic_slice_in_dim(k, j * C, C, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, j * C, C, axis=1)
+        qt = qc.transpose(0, 2, 3, 1, 4)  # (B, KV, G, C, hd)
+        s = (
+            jnp.einsum(
+                "bkgqh,btkh->bkgqt",
+                qt.astype(COMPUTE_DTYPE),
+                kc.astype(COMPUTE_DTYPE),
+                preferred_element_type=jnp.float32,
+            )
+            * scale
+        )  # (B, KV, G, C, C)
+        qpos = i * C + jnp.arange(C)
+        kpos = j * C + jnp.arange(C)
+        mask = kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+
+        m_new = jnp.maximum(m, s.max(-1))
+        # fully-masked-so-far rows: keep alpha/p at 0, not nan
+        alpha = jnp.where(m <= NEG_INF, 0.0, jnp.exp(m - m_new))
+        p = jnp.where(
+            m_new[..., None] <= NEG_INF, 0.0, jnp.exp(s - m_new[..., None])
+        )
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqt,btkh->bkgqh",
+            p.astype(COMPUTE_DTYPE),
+            vc.astype(COMPUTE_DTYPE),
+            preferred_element_type=jnp.float32,
+        )
+        m = m_new  # carry the running max forward
+        norm = acc / jnp.maximum(l[..., None], 1e-30)
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out,
+            norm.transpose(0, 3, 1, 2, 4).astype(COMPUTE_DTYPE),
+            i * C,
+            axis=1,
+        )
+        return (out, m, l, acc), None
+
+    xs = (jnp.asarray(qi), jnp.asarray(kj), jnp.asarray(is_start))
+    (out, _, _, _), _ = jax.lax.scan(step, (out0, m0, l0, a0), xs)
+    return out[:, :S_real]
+
+
+# ===================================================================== #
+# GQA
+# ===================================================================== #
+def init_attn(key, cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    kq, kk, kvk, ko = jax.random.split(key, 4)
+    hds = "hd" if cfg.shard_hd else None
+    p = {
+        "wq": fanin(kq, (d, h, hd), ("fsdp", "heads", hds)),
+        "wk": fanin(kk, (d, kv, hd), ("fsdp", "heads", hds)),
+        "wv": fanin(kvk, (d, kv, hd), ("fsdp", "heads", hds)),
+        "wo": fanin(ko, (h, hd, d), ("heads", hds, "fsdp"), fan_axis=1),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros((h, hd), ("heads", hds))
+        p["bk"] = zeros((kv, hd), ("heads", hds))
+        p["bv"] = zeros((kv, hd), ("heads", hds))
+    return p
+
+
+def _qkv(params, x, positions, cfg: ModelConfig):
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    g = h // kv
+    q = matmul(x, params["wq"], "bsd,dhk->bshk")
+    k = matmul(x, params["wk"], "bsd,dhk->bshk")
+    v = matmul(x, params["wv"], "bsd,dhk->bshk")
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    B, S = x.shape[:2]
+    q = q.reshape(B, S, kv, g, hd)
+    return q, k, v
+
+
+
+def _constrained_qkv(q, k, v, cfg: ModelConfig):
+    """Apply the attention sharding mode (see attn docstring): GQA
+    broadcast to the full head axis, or heads/hd constraints."""
+    B, S = q.shape[:2]
+    if cfg.gqa_broadcast and cfg.n_heads > cfg.n_kv:
+        g = cfg.n_heads // cfg.n_kv
+        k = jnp.repeat(k, g, axis=2)  # (B, S, H, hd)
+        v = jnp.repeat(v, g, axis=2)
+        q = q.reshape(B, S, cfg.n_heads, 1, cfg.hd)
+        q = constrain(q, "batch", None, "heads", None, None)
+        k = constrain(k, "batch", None, "heads", None)
+        v = constrain(v, "batch", None, "heads", None)
+    else:
+        hds = "hd" if cfg.shard_hd else None
+        q = constrain(q, "batch", None, "heads", None, hds)
+        k = constrain(k, "batch", None, "heads", hds)
+        v = constrain(v, "batch", None, "heads", hds)
+    return q, k, v
+
+
+def attn(params, x, positions, cfg: ModelConfig):
+    """Train/prefill GQA. x: (B, S, d), positions: (B, S).
+
+    gqa_broadcast: when n_kv < tp, sharding the kv-head axis is
+    impossible and sharding head_dim turns every score/PV einsum into an
+    activation-sized partial-sum all-reduce (§Perf iteration A). Instead
+    repeat K/V to the full n_heads (Megatron-style GQA replication) so
+    ALL attention tensors shard on the q-head axis — per-device K/V
+    bytes actually shrink (H/tp <= n_kv) and attention needs no
+    collectives at all."""
+    q, k, v = _qkv(params, x, positions, cfg)
+    B, S = x.shape[:2]
+    q, k, v = _constrained_qkv(q, k, v, cfg)
+    o = chunked_causal(
+        q,
+        k,
+        v,
+        chunk=cfg.attn_chunk,
+        window=cfg.window,
+        packing=cfg.causal_packing,
+        flash=cfg.flash_backward,
+    )
+    o = o.reshape(B, S, cfg.n_heads, cfg.hd)
+    return matmul(o, params["wo"], "bshk,hkd->bsd")
+
+
+def attn_decode(params, x, cache, pos, cfg: ModelConfig):
+    """Single-token decode. x: (B, 1, d); cache: {k,v: (B, T, KV, hd)};
+    pos: scalar int32 (same position for every sequence in the batch).
+    For sliding-window configs the cache is a rolling buffer of length
+    min(window, T); writes go to pos % T."""
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    g = h // kv
+    B = x.shape[0]
+    T = cache["k"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(params, x, positions, cfg)
+    slot = pos % T if cfg.window else jnp.minimum(pos, T - 1)
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1
+    )
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1
+    )
+    idx = jnp.arange(T)
+    valid = (idx <= pos) | (pos >= T)  # rolling buffer fully valid once warm
+    s = (
+        jnp.einsum(
+            "bkgh,btkh->bkgt",
+            q[:, 0].astype(COMPUTE_DTYPE),
+            k.astype(COMPUTE_DTYPE),
+            preferred_element_type=jnp.float32,
+        )
+        * hd ** -0.5
+    )
+    s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum(
+        "bkgt,btkh->bkgh",
+        p.astype(COMPUTE_DTYPE),
+        v.astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32,
+    ).astype(COMPUTE_DTYPE)
+    o = o.reshape(B, 1, h, hd)
+    y = matmul(o, params["wo"], "bshk,hkd->bsd")
+    return y, {"k": k, "v": v}
+
+
+def attn_cache_shape(cfg: ModelConfig, batch: int, seq: int):
+    T = min(cfg.window, seq) if cfg.window else seq
+    sh = (batch, T, cfg.n_kv, cfg.hd)
+    spec = ("batch", "seq", "heads", "hd")
+    return {"k": (sh, spec), "v": (sh, spec)}
+
+
+# ===================================================================== #
+# MLA (DeepSeek-V2)
+# ===================================================================== #
+def init_mla(key, cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    lora, qn, qr, vh = cfg.kv_lora, cfg.qk_nope, cfg.qk_rope, cfg.v_head
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    hds = "hd" if cfg.shard_hd else None
+    return {
+        "w_dkv": fanin(k1, (d, lora), ("fsdp", "tp")),
+        "norm_kv": Param(jnp.ones((lora,), jnp.float32), (None,)),
+        "w_uk": fanin(k2, (lora, h, qn), ("fsdp", "heads", hds)),
+        "w_uv": fanin(k3, (lora, h, vh), ("fsdp", "heads", hds)),
+        "w_kr": fanin(k4, (d, qr), ("fsdp", None)),
+        "w_q": fanin(k5, (d, h, qn + qr), ("fsdp", "heads", hds)),
+        "w_o": fanin(k6, (h, vh, d), ("heads", hds, "fsdp"), fan_axis=1),
+    }
+
+
+def mla(params, x, positions, cfg: ModelConfig):
+    """Train/prefill MLA (non-absorbed form)."""
+    B, S, _ = x.shape
+    h, qn, qr = cfg.n_heads, cfg.qk_nope, cfg.qk_rope
+    q = matmul(x, params["w_q"], "bsd,dhk->bshk")
+    q_nope, q_rope = q[..., :qn], q[..., qn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    ckv = matmul(x, params["w_dkv"], "bsd,dl->bsl")
+    ckv = rms_norm(ckv, params["norm_kv"], cfg.norm_eps)
+    k_nope = matmul(ckv, params["w_uk"], "bsl,lhk->bshk")
+    v = matmul(ckv, params["w_uv"], "bsl,lhk->bshk")
+    k_rope = matmul(x, params["w_kr"], "bsd,dr->bsr")[:, :, None, :]
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    k_rope = jnp.broadcast_to(k_rope, (B, S, h, qr))
+    q_cat = jnp.concatenate([q_nope, q_rope], -1)[:, :, :, None, :]
+    k_cat = jnp.concatenate([k_nope, k_rope], -1)
+    q_cat = q_cat.reshape(B, S, h, 1, qn + qr)
+    q_cat = constrain(q_cat, "batch", None, "heads", None, None)
+    k_cat = constrain(k_cat, "batch", None, "heads", None)
+    v = constrain(v, "batch", None, "heads", None)
+    o = chunked_causal(
+        q_cat,
+        k_cat,
+        v,
+        chunk=cfg.attn_chunk,
+        packing=cfg.causal_packing,
+        scale=(qn + qr) ** -0.5,
+        flash=cfg.flash_backward,
+    )
+    o = o.reshape(B, S, h, cfg.v_head)
+    return matmul(o, params["w_o"], "bshk,hkd->bsd")
+
+
+def mla_decode(params, x, cache, pos, cfg: ModelConfig):
+    """Absorbed-form decode: the cache holds only (c_kv, k_rope) — the
+    MLA memory saving — and W_uk/W_uv are folded into the query/output."""
+    B = x.shape[0]
+    h, qn, qr = cfg.n_heads, cfg.qk_nope, cfg.qk_rope
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q = matmul(x, params["w_q"], "bsd,dhk->bshk")
+    q_nope, q_rope = q[..., :qn], q[..., qn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)[:, 0]
+    ckv_new = matmul(x, params["w_dkv"], "bsd,dl->bsl")
+    ckv_new = rms_norm(ckv_new, params["norm_kv"], cfg.norm_eps)
+    kr_new = matmul(x, params["w_kr"], "bsd,dr->bsr")[:, :, None, :]
+    kr_new = apply_rope(kr_new, positions, cfg.rope_theta)[:, :, 0, :]
+    ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache["ckv"], ckv_new.astype(cache["ckv"].dtype), pos, axis=1
+    )
+    kr = jax.lax.dynamic_update_slice_in_dim(
+        cache["kr"], kr_new.astype(cache["kr"].dtype), pos, axis=1
+    )
+    q_abs = jnp.einsum(
+        "bhk,lhk->bhl",
+        q_nope[:, 0].astype(COMPUTE_DTYPE),
+        params["w_uk"].astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32,
+    )
+    s = jnp.einsum(
+        "bhl,btl->bht", q_abs.astype(COMPUTE_DTYPE), ckv.astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32,
+    )
+    s = s + jnp.einsum(
+        "bhr,btr->bht",
+        q_rope.astype(COMPUTE_DTYPE),
+        kr.astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32,
+    )
+    s = s * (qn + qr) ** -0.5
+    T = ckv.shape[1]
+    valid = jnp.arange(T) <= pos
+    s = jnp.where(valid[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum(
+        "bht,btl->bhl", p.astype(COMPUTE_DTYPE), ckv.astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32,
+    )
+    o = jnp.einsum(
+        "bhl,lhv->bhv", ctx.astype(COMPUTE_DTYPE),
+        params["w_uv"].astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32,
+    ).astype(COMPUTE_DTYPE)
+    y = matmul(o[:, None], params["w_o"], "bshk,hkd->bsd")
+    return y, {"ckv": ckv, "kr": kr}
+
+
+def mla_cache_shape(cfg: ModelConfig, batch: int, seq: int):
+    return {
+        "ckv": ((batch, seq, cfg.kv_lora), ("batch", "seq", None)),
+        "kr": ((batch, seq, cfg.qk_rope), ("batch", "seq", None)),
+    }
+
+
+# ===================================================================== #
+# prefill (forward + cache emission)
+# ===================================================================== #
+def _pack_kv(t_new: jax.Array, cache_len: int, window: int):
+    """Pack (B, S, ...) per-position tensors into a decode cache of length
+    T = cache_len (full attention: left-aligned, zero-padded) or
+    T = min(window, cache_len) (rolling buffer, slot = pos % T)."""
+    B, S = t_new.shape[:2]
+    if window:
+        T = min(window, cache_len)
+        keep = min(T, S)
+        tail = t_new[:, -keep:]
+        pos = jnp.arange(S - keep, S) % T
+        buf = jnp.zeros((B, T, *t_new.shape[2:]), t_new.dtype)
+        return buf.at[:, pos].set(tail)
+    T = cache_len
+    if S >= T:
+        return t_new[:, :T]
+    pad = jnp.zeros((B, T - S, *t_new.shape[2:]), t_new.dtype)
+    return jnp.concatenate([t_new, pad], axis=1)
+
+
+def attn_prefill(params, x, positions, cfg: ModelConfig, cache_len: int):
+    q, k, v = _qkv(params, x, positions, cfg)
+    k_cache, v_cache = k, v  # cache stores the compact KV heads
+    q, k, v = _constrained_qkv(q, k, v, cfg)
+    o = chunked_causal(
+        q, k, v,
+        chunk=cfg.attn_chunk, window=cfg.window, packing=cfg.causal_packing,
+        flash=cfg.flash_backward,
+    )
+    B, S = x.shape[:2]
+    o = o.reshape(B, S, cfg.n_heads, cfg.hd)
+    y = matmul(o, params["wo"], "bshk,hkd->bsd")
+    cache = {
+        "k": _pack_kv(k_cache, cache_len, cfg.window),
+        "v": _pack_kv(v_cache, cache_len, cfg.window),
+    }
+    return y, cache
+
+
+def mla_prefill(params, x, positions, cfg: ModelConfig, cache_len: int):
+    B, S, _ = x.shape
+    y = mla(params, x, positions, cfg)
+    ckv = matmul(x, params["w_dkv"], "bsd,dl->bsl")
+    ckv = rms_norm(ckv, params["norm_kv"], cfg.norm_eps)
+    kr = matmul(x, params["w_kr"], "bsd,dr->bsr")[:, :, None, :]
+    kr = apply_rope(kr, positions, cfg.rope_theta)[:, :, 0, :]
+    cache = {
+        "ckv": _pack_kv(ckv, cache_len, 0),
+        "kr": _pack_kv(kr, cache_len, 0),
+    }
+    return y, cache

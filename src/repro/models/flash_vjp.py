@@ -1,0 +1,195 @@
+"""Flash-style custom VJP for chunked causal attention.
+
+Without this, differentiating the (q-chunk × kv-chunk) lax.scan makes
+scan-AD STACK every chunk's score/probability tensors as residuals —
+the dry-run profile shows ~10 TB/device of dynamic-update-slice traffic
+and multi-GB temp buffers per layer on train cells. The classic flash
+backward fixes it structurally: the forward saves only (out, row-max m,
+row-sum l); the backward walks the same static pair schedule and
+RECOMPUTES each score block, accumulating dq/dk/dv in place. Residual
+memory drops from O(S²/C · pairs) to O(S) per head.
+
+Used by attention.chunked_causal when cfg/training requests it (the
+§Perf "flash backward" iteration; EXPERIMENTS.md records before/after).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _pair_schedule(R: int, C: int, window: int, packing: bool):
+    pairs = []
+    for i in range(R):
+        if packing:
+            j_min = 0
+            if window:
+                j_min = max(0, (i * C - (window - 1)) // C)
+            js = range(j_min, i + 1)
+        else:
+            js = range(R)
+        for j in js:
+            pairs.append((i, j))
+    qi = np.asarray([p[0] for p in pairs], np.int32)
+    kj = np.asarray([p[1] for p in pairs], np.int32)
+    start = np.zeros(len(pairs), bool)
+    start[0] = True
+    start[1:] = qi[1:] != qi[:-1]
+    return qi, kj, start
+
+
+def _mask(i, j, C, window):
+    qpos = i * C + jnp.arange(C)
+    kpos = j * C + jnp.arange(C)
+    m = kpos[None, :] <= qpos[:, None]
+    if window:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_causal(q, k, v, chunk: int, window: int, packing: bool,
+                 scale: float):
+    out, _, _ = _forward(q, k, v, chunk, window, packing, scale)
+    return out
+
+
+def _forward(q, k, v, chunk, window, packing, scale):
+    B, S, KV, G, hd = q.shape
+    hdv = v.shape[-1]
+    C = chunk
+    R = S // C
+    qi, kj, start = _pair_schedule(R, C, window, packing)
+
+    out0 = jnp.zeros((B, S, KV, G, hdv), jnp.float32)
+    mrow0 = jnp.full((B, S, KV, G), NEG_INF, jnp.float32)
+    lrow0 = jnp.zeros((B, S, KV, G), jnp.float32)
+    m0 = jnp.full((B, KV, G, C), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, C), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, C, hdv), jnp.float32)
+
+    def step(carry, xs):
+        out, mrow, lrow, m, l, acc = carry
+        i, j, st = xs
+        m = jnp.where(st, NEG_INF, m)
+        l = jnp.where(st, 0.0, l)
+        acc = jnp.where(st, 0.0, acc)
+        qc = jax.lax.dynamic_slice_in_dim(q, i * C, C, 1)
+        kc = jax.lax.dynamic_slice_in_dim(k, j * C, C, 1)
+        vc = jax.lax.dynamic_slice_in_dim(v, j * C, C, 1)
+        qt = qc.transpose(0, 2, 3, 1, 4)
+        s = jnp.einsum(
+            "bkgqh,btkh->bkgqt", qt.astype(q.dtype), kc,
+            preferred_element_type=jnp.float32,
+        ) * scale
+        s = jnp.where(_mask(i, j, C, window)[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        alpha = jnp.where(m <= NEG_INF, 0.0, jnp.exp(m - m_new))
+        p = jnp.where(m_new[..., None] <= NEG_INF, 0.0,
+                      jnp.exp(s - m_new[..., None]))
+        l = l * alpha + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgqt,btkh->bkgqh", p.astype(v.dtype), vc,
+            preferred_element_type=jnp.float32,
+        )
+        m = m_new
+        norm = acc / jnp.maximum(l[..., None], 1e-30)
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, norm.transpose(0, 3, 1, 2, 4), i * C, 1
+        )
+        mrow = jax.lax.dynamic_update_slice_in_dim(
+            mrow, m.transpose(0, 3, 1, 2), i * C, 1
+        )
+        lrow = jax.lax.dynamic_update_slice_in_dim(
+            lrow, l.transpose(0, 3, 1, 2), i * C, 1
+        )
+        return (out, mrow, lrow, m, l, acc), None
+
+    xs = tuple(map(jnp.asarray, _pair_schedule(R, C, window, packing)))
+    (out, mrow, lrow, *_), _ = jax.lax.scan(
+        step, (out0, mrow0, lrow0, m0, l0, a0), xs
+    )
+    return out.astype(q.dtype), mrow, lrow
+
+
+def _fwd(q, k, v, chunk, window, packing, scale):
+    out, mrow, lrow = _forward(q, k, v, chunk, window, packing, scale)
+    return out, (q, k, v, out, mrow, lrow)
+
+
+def _bwd(chunk, window, packing, scale, res, dout):
+    q, k, v, out, mrow, lrow = res
+    B, S, KV, G, hd = q.shape
+    hdv = v.shape[-1]
+    C = chunk
+    R = S // C
+    # D_i = rowsum(dout * out) — the softmax-jacobian diagonal term
+    D = (dout.astype(jnp.float32) * out.astype(jnp.float32)).sum(-1)
+
+    dq0 = jnp.zeros(q.shape, jnp.float32)
+    dk0 = jnp.zeros(k.shape, jnp.float32)
+    dv0 = jnp.zeros(v.shape, jnp.float32)
+
+    def step(carry, xs):
+        dq, dk, dv = carry
+        i, j, _ = xs
+        qc = jax.lax.dynamic_slice_in_dim(q, i * C, C, 1)
+        kc = jax.lax.dynamic_slice_in_dim(k, j * C, C, 1)
+        vc = jax.lax.dynamic_slice_in_dim(v, j * C, C, 1)
+        doc = jax.lax.dynamic_slice_in_dim(dout, i * C, C, 1)
+        mc = jax.lax.dynamic_slice_in_dim(mrow, i * C, C, 1)
+        lc = jax.lax.dynamic_slice_in_dim(lrow, i * C, C, 1)
+        Dc = jax.lax.dynamic_slice_in_dim(D, i * C, C, 1)
+        qt = qc.transpose(0, 2, 3, 1, 4)             # (B,KV,G,C,hd)
+        dot = doc.transpose(0, 2, 3, 1, 4)           # (B,KV,G,C,hdv)
+        mt = mc.transpose(0, 2, 3, 1)                # (B,KV,G,C)
+        lt = jnp.maximum(lc.transpose(0, 2, 3, 1), 1e-30)
+        Dt = Dc.transpose(0, 2, 3, 1)
+        s = jnp.einsum(
+            "bkgqh,btkh->bkgqt", qt.astype(q.dtype), kc,
+            preferred_element_type=jnp.float32,
+        ) * scale
+        s = jnp.where(_mask(i, j, C, window)[None, None, None], s, NEG_INF)
+        p = jnp.where(
+            mt[..., None] <= NEG_INF, 0.0, jnp.exp(s - mt[..., None])
+        ) / lt[..., None]                            # (B,KV,G,C,Ct)
+        # dv_j += p^T dout_i
+        dvc = jnp.einsum(
+            "bkgqt,bkgqh->btkh", p.astype(v.dtype), dot.astype(v.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        # ds = p * (dout·v^T - D)
+        dp = jnp.einsum(
+            "bkgqh,btkh->bkgqt", dot.astype(v.dtype), vc,
+            preferred_element_type=jnp.float32,
+        )
+        ds = p * (dp - Dt[..., None]) * scale
+        dqc = jnp.einsum(
+            "bkgqt,btkh->bkgqh", ds.astype(k.dtype), kc,
+            preferred_element_type=jnp.float32,
+        ).transpose(0, 3, 1, 2, 4)                   # (B,C,KV,G,hd)
+        dkc = jnp.einsum(
+            "bkgqt,bkgqh->btkh", ds.astype(q.dtype), qt.astype(q.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        upd_q = jax.lax.dynamic_slice_in_dim(dq, i * C, C, 1) + dqc
+        dq = jax.lax.dynamic_update_slice_in_dim(dq, upd_q, i * C, 1)
+        upd_k = jax.lax.dynamic_slice_in_dim(dk, j * C, C, 1) + dkc
+        dk = jax.lax.dynamic_update_slice_in_dim(dk, upd_k, j * C, 1)
+        upd_v = jax.lax.dynamic_slice_in_dim(dv, j * C, C, 1) + dvc
+        dv = jax.lax.dynamic_update_slice_in_dim(dv, upd_v, j * C, 1)
+        return (dq, dk, dv), None
+
+    xs = tuple(map(jnp.asarray, _pair_schedule(R, C, window, packing)))
+    (dq, dk, dv), _ = jax.lax.scan(step, (dq0, dk0, dv0), xs)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_causal.defvjp(_fwd, _bwd)

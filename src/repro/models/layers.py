@@ -1,0 +1,145 @@
+"""Shared modeling primitives (pure JAX — no flax): parameters carry
+their logical sharding spec; RMSNorm, RoPE, dense projections, SwiGLU."""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32
+
+
+class Param:
+    """A parameter leaf + its logical PartitionSpec.
+
+    Registered as a pytree node whose *children* are only the value; the
+    spec rides along as static aux data, so jax transformations (vmap,
+    eval_shape, grad) see pure arrays."""
+
+    __slots__ = ("value", "spec")
+
+    def __init__(self, value, spec: Tuple[Optional[str], ...]):
+        self.value = value
+        self.spec = tuple(spec)
+
+    def __repr__(self):
+        return f"Param({self.value!r}, spec={self.spec})"
+
+
+jax.tree_util.register_pytree_node(
+    Param,
+    lambda p: ((p.value,), p.spec),
+    lambda spec, children: Param(children[0], spec),
+)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def split_params(tree):
+    """Param tree -> (value tree, logical-spec tree)."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    specs = jax.tree.map(lambda p: p.spec, tree, is_leaf=is_param)
+    return values, specs
+
+
+def normal(key, shape, spec, std=0.02, dtype=PARAM_DTYPE) -> Param:
+    return Param(jax.random.normal(key, shape, dtype) * std, spec)
+
+
+def zeros(shape, spec, dtype=PARAM_DTYPE) -> Param:
+    return Param(jnp.zeros(shape, dtype), spec)
+
+
+def ones(shape, spec, dtype=PARAM_DTYPE) -> Param:
+    return Param(jnp.ones(shape, dtype), spec)
+
+
+def fanin(key, shape, spec, fan_axis=0, dtype=PARAM_DTYPE) -> Param:
+    fan = shape[fan_axis]
+    return normal(key, shape, spec, std=fan ** -0.5, dtype=dtype)
+
+
+# --------------------------------------------------------------------- #
+def rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = (xf * xf).mean(-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def init_norm(d: int) -> Param:
+    return ones((d,), (None,))
+
+
+# --------------------------------------------------------------------- #
+def rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd) rotated pairwise; positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(ang)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+def matmul(x: jax.Array, w: jax.Array, dims: str) -> jax.Array:
+    """einsum in compute dtype with f32 accumulation."""
+    out = jnp.einsum(
+        dims,
+        x.astype(COMPUTE_DTYPE),
+        w.astype(COMPUTE_DTYPE),
+        preferred_element_type=jnp.float32,
+    )
+    return out.astype(COMPUTE_DTYPE)
+
+
+def init_mlp(key, d: int, f: int, gated: bool = True) -> dict:
+    kg, ku, kd = jax.random.split(key, 3)
+    p = {
+        "w_up": fanin(ku, (d, f), ("fsdp", "tp")),
+        "w_down": fanin(kd, (f, d), ("tp", "fsdp")),
+    }
+    if gated:
+        p["w_gate"] = fanin(kg, (d, f), ("fsdp", "tp"))
+    return p
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    """SwiGLU FFN (or plain GELU MLP when ungated). x: (B, S, d)."""
+    u = matmul(x, params["w_up"], "bsd,df->bsf")
+    if "w_gate" in params:
+        g = matmul(x, params["w_gate"], "bsd,df->bsf")
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u
+    else:
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(u.dtype)
+    return matmul(h, params["w_down"], "bsf,fd->bsd")
+
+
+def cross_entropy(
+    logits: jax.Array, labels: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Stable CE in f32. logits: (B, S, V); labels: (B, S) int32.
+
+    Keeps the vocab dim sharded: max/logsumexp reduce over the sharded
+    axis (GSPMD inserts the collectives) and the label logit is fetched
+    with take_along_axis rather than a one-hot (B,S,V) product.
+    """
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(lf.max(-1, keepdims=True))
+    lse = jnp.log(jnp.exp(lf - m).sum(-1)) + m[..., 0]
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    return nll.mean(), nll

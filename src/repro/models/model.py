@@ -1,0 +1,356 @@
+"""Model assembly: config -> params / forward / loss / prefill / decode.
+
+Layers are organized into scan groups (see ModelConfig.scan_groups):
+the repeating unit's parameters are stacked on a leading axis and the
+unit is applied under lax.scan (+ jax.checkpoint for training), keeping
+HLO size independent of depth. Decode threads a per-layer cache pytree
+with the same group structure, so the cache scans together with the
+parameters.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, moe as moe_mod, recurrent, xlstm
+from .config import ModelConfig
+from .layers import (
+    COMPUTE_DTYPE,
+    Param,
+    cross_entropy,
+    init_mlp,
+    init_norm,
+    is_param,
+    matmul,
+    mlp,
+    normal,
+    rms_norm,
+    split_params,
+)
+from .sharding import constrain
+
+# mixer registry: kind -> (init, apply, decode, cache_shape, prefill)
+MIXERS = {
+    "attn": (
+        attention.init_attn,
+        attention.attn,
+        attention.attn_decode,
+        attention.attn_cache_shape,
+        attention.attn_prefill,
+    ),
+    "mla": (
+        attention.init_mla,
+        attention.mla,
+        attention.mla_decode,
+        attention.mla_cache_shape,
+        attention.mla_prefill,
+    ),
+    "rglru": (
+        recurrent.init_rglru,
+        recurrent.rglru,
+        recurrent.rglru_decode,
+        recurrent.rglru_cache_shape,
+        recurrent.rglru_prefill,
+    ),
+    "mlstm": (
+        xlstm.init_mlstm,
+        xlstm.mlstm,
+        xlstm.mlstm_decode,
+        xlstm.mlstm_cache_shape,
+        xlstm.mlstm_prefill,
+    ),
+    "slstm": (
+        xlstm.init_slstm,
+        xlstm.slstm,
+        xlstm.slstm_decode,
+        xlstm.slstm_cache_shape,
+        xlstm.slstm_prefill,
+    ),
+}
+
+
+# ===================================================================== #
+# init
+# ===================================================================== #
+def _init_block(key, kind: Tuple[str, str], cfg: ModelConfig) -> dict:
+    mixer, ffn = kind
+    km, kf = jax.random.split(key)
+    p = {"norm1": init_norm(cfg.d_model), "mixer": MIXERS[mixer][0](km, cfg)}
+    if ffn == "dense":
+        p["norm2"] = init_norm(cfg.d_model)
+        p["ffn"] = init_mlp(kf, cfg.d_model, cfg.d_ff, gated=cfg.mlp_gated)
+    elif ffn == "moe":
+        p["norm2"] = init_norm(cfg.d_model)
+        p["ffn"] = moe_mod.init_moe(kf, cfg)
+    return p
+
+
+def _init_unit(key, unit: List[Tuple[str, str]], cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, len(unit))
+    return {f"b{i}": _init_block(keys[i], unit[i], cfg) for i in range(len(unit))}
+
+
+def _stack(trees: List[dict]) -> dict:
+    """Stack Param trees on a new leading axis; specs get a leading None."""
+    def merge(*ps):
+        return Param(
+            jnp.stack([p.value for p in ps]), (None, *ps[0].spec)
+        )
+    return jax.tree.map(merge, *trees, is_leaf=is_param)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    kg, ke, ku = jax.random.split(key, 3)
+    groups = []
+    for unit, reps in cfg.scan_groups():
+        kg, sub = jax.random.split(kg)
+        if reps == 1:
+            groups.append(_init_unit(sub, unit, cfg))
+        else:
+            keys = jax.random.split(sub, reps)
+            groups.append(_stack([_init_unit(k, unit, cfg) for k in keys]))
+    p: Dict[str, Any] = {"groups": groups, "final_norm": init_norm(cfg.d_model)}
+    if cfg.frontend == "tokens":
+        p["embed"] = normal(ke, (cfg.vocab, cfg.d_model), ("vocab", "fsdp"))
+        if not cfg.tied_embeddings:
+            p["unembed"] = normal(
+                ku, (cfg.d_model, cfg.vocab), ("fsdp", "vocab"),
+                std=cfg.d_model ** -0.5,
+            )
+    else:
+        p["unembed"] = normal(
+            ku, (cfg.d_model, cfg.vocab), ("fsdp", "vocab"),
+            std=cfg.d_model ** -0.5,
+        )
+    return p
+
+
+def abstract_params(cfg: ModelConfig):
+    """(value ShapeDtypeStruct tree, logical-spec tree) without allocating."""
+    tree = jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0)
+    )
+    return split_params(tree)
+
+
+def param_count(cfg: ModelConfig) -> int:
+    values, _ = abstract_params(cfg)
+    return int(sum(np.prod(v.shape) for v in jax.tree.leaves(values)))
+
+
+def active_param_count(cfg: ModelConfig) -> int:
+    """Params used per token: routed experts count top_k/n_experts."""
+    values, _ = abstract_params(cfg)
+    total = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(values):
+        n = int(np.prod(leaf.shape))
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if any(k in ("w_gate", "w_up", "w_down") for k in keys) and any(
+            k == "ffn" for k in keys
+        ) and cfg.n_experts and len(leaf.shape) == 4:
+            # stacked routed expert weight (reps, E, ...)
+            n = n * cfg.top_k // cfg.n_experts
+        elif cfg.n_experts and len(leaf.shape) == 3 and leaf.shape[0] == cfg.n_experts:
+            n = n * cfg.top_k // cfg.n_experts
+        total += n
+    return int(total)
+
+
+# ===================================================================== #
+# apply
+# ===================================================================== #
+def _apply_block(
+    values, h, positions, cfg, kind, cache=None, pos=None, cache_len=0
+):
+    """One block. Returns (h, aux, new_cache).
+
+    cache is None, cache_len=0   -> plain forward (train)
+    cache is None, cache_len>0   -> prefill (forward + cache emission)
+    cache is a pytree            -> single-token decode
+    """
+    mixer, ffn = kind
+    _, apply_fn, decode_fn, _, prefill_fn = MIXERS[mixer]
+    hin = rms_norm(h, values["norm1"], cfg.norm_eps)
+    if cache is not None:
+        y, new_cache = decode_fn(values["mixer"], hin, cache, pos, cfg)
+    elif cache_len:
+        y, new_cache = prefill_fn(values["mixer"], hin, positions, cfg, cache_len)
+    else:
+        y = apply_fn(values["mixer"], hin, positions, cfg)
+        new_cache = None
+    h = h + y
+    aux = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        hin = rms_norm(h, values["norm2"], cfg.norm_eps)
+        if ffn == "dense":
+            y = mlp(values["ffn"], hin)
+        else:
+            y, aux = moe_mod.moe(values["ffn"], hin, cfg)
+        h = h + y
+    h = constrain(h, "batch", "seq", None)
+    return h, aux, new_cache
+
+
+def _apply_unit(
+    values, h, positions, cfg, unit, caches=None, pos=None, cache_len=0
+):
+    auxs = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for i, kind in enumerate(unit):
+        c = caches[f"b{i}"] if caches is not None else None
+        h, aux, nc = _apply_block(
+            values[f"b{i}"], h, positions, cfg, kind, c, pos, cache_len
+        )
+        auxs = auxs + aux
+        new_caches.append(nc)
+    if caches is None and not cache_len:
+        return h, auxs, None
+    return h, auxs, {f"b{i}": nc for i, nc in enumerate(new_caches)}
+
+
+def _embed_in(values, inputs, cfg: ModelConfig):
+    if cfg.frontend == "tokens":
+        h = values["embed"][inputs].astype(COMPUTE_DTYPE)
+    else:
+        h = inputs.astype(COMPUTE_DTYPE)
+    return constrain(h, "batch", "seq", None)
+
+
+def _logits_out(values, h, cfg: ModelConfig):
+    h = rms_norm(h, values["final_norm"], cfg.norm_eps)
+    if cfg.frontend == "tokens" and cfg.tied_embeddings:
+        logits = matmul(h, values["embed"], "bsd,vd->bsv")
+    else:
+        logits = matmul(h, values["unembed"], "bsd,dv->bsv")
+    return constrain(logits, "batch", None, "vocab")
+
+
+def forward(values, inputs, cfg: ModelConfig, training: bool = False):
+    """inputs: (B, S) int32 tokens or (B, S, d) embeddings.
+    Returns (logits, aux_loss)."""
+    B = inputs.shape[0]
+    S = inputs.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    h = _embed_in(values, inputs, cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+    for gi, (unit, reps) in enumerate(cfg.scan_groups()):
+        gv = values["groups"][gi]
+        if reps == 1:
+            h, aux, _ = _apply_unit(gv, h, positions, cfg, unit)
+            aux_total = aux_total + aux
+        else:
+            def body_once(carry, layer_values, unit=unit):
+                hh, aux, _ = _apply_unit(
+                    layer_values, carry, positions, cfg, unit
+                )
+                return hh, aux
+
+            fn = body_once
+            if training and cfg.remat == "full":
+                fn = jax.checkpoint(
+                    body_once, policy=jax.checkpoint_policies.nothing_saveable
+                )
+            h, auxs = jax.lax.scan(fn, h, gv)
+            aux_total = aux_total + auxs.sum()
+    return _logits_out(values, h, cfg), aux_total
+
+
+def loss_fn(values, batch, cfg: ModelConfig, training: bool = True):
+    logits, aux = forward(values, batch["inputs"], cfg, training=training)
+    ce, _ = cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+# ===================================================================== #
+# serving
+# ===================================================================== #
+def cache_shapes(cfg: ModelConfig, batch: int, cache_len: int):
+    """Pytree of (shape, logical spec, dtype) matching the group layout."""
+    groups = []
+    for unit, reps in cfg.scan_groups():
+        unit_caches = {}
+        for i, (mixer, _) in enumerate(unit):
+            shapes = MIXERS[mixer][3](cfg, batch, cache_len)
+            out = {}
+            for name, tup in shapes.items():
+                if len(tup) == 3:
+                    shape, spec, dtype = tup
+                else:
+                    (shape, spec), dtype = tup, COMPUTE_DTYPE
+                if reps > 1:
+                    shape = (reps, *shape)
+                    spec = (None, *spec)
+                out[name] = (shape, spec, dtype)
+            unit_caches[f"b{i}"] = out
+        groups.append(unit_caches)
+    return groups
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    shapes = cache_shapes(cfg, batch, cache_len)
+    return jax.tree.map(
+        lambda t: jnp.zeros(t[0], t[2]),
+        shapes,
+        is_leaf=lambda t: isinstance(t, tuple) and isinstance(t[0], tuple),
+    )
+
+
+def decode_step(values, cache, tokens, pos, cfg: ModelConfig):
+    """One decode step. tokens: (B, 1) int32 (or (B, 1, d) embeddings);
+    pos: scalar int32 position of the new token. Returns (logits, cache)."""
+    h = _embed_in(values, tokens, cfg)
+    new_groups = []
+    for gi, (unit, reps) in enumerate(cfg.scan_groups()):
+        gv = values["groups"][gi]
+        gc = cache[gi]
+        if reps == 1:
+            h, _, nc = _apply_unit(gv, h, None, cfg, unit, caches=gc, pos=pos)
+        else:
+            def body(carry, xs, unit=unit):
+                layer_values, layer_cache = xs
+                hh, _, nc = _apply_unit(
+                    layer_values, carry, None, cfg, unit,
+                    caches=layer_cache, pos=pos,
+                )
+                return hh, nc
+
+            h, nc = jax.lax.scan(body, h, (gv, gc))
+        new_groups.append(nc)
+    logits = _logits_out(values, h, cfg)
+    return logits, new_groups
+
+
+def prefill(values, tokens, cfg: ModelConfig, cache_len: int):
+    """Process a full prompt, returning (logits, decode cache).
+
+    tokens: (B, S) int32 (or (B, S, d) embeddings). The emitted cache has
+    time capacity `cache_len` (rolling min(window, cache_len) buffers for
+    sliding-window attention) and plugs directly into decode_step at
+    pos = S."""
+    B = tokens.shape[0]
+    S = tokens.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    h = _embed_in(values, tokens, cfg)
+    new_groups = []
+    for gi, (unit, reps) in enumerate(cfg.scan_groups()):
+        gv = values["groups"][gi]
+        if reps == 1:
+            h, _, nc = _apply_unit(
+                gv, h, positions, cfg, unit, cache_len=cache_len
+            )
+        else:
+            def body(carry, layer_values, unit=unit):
+                hh, _, nc = _apply_unit(
+                    layer_values, carry, positions, cfg, unit,
+                    cache_len=cache_len,
+                )
+                return hh, nc
+
+            h, nc = jax.lax.scan(body, h, gv)
+        new_groups.append(nc)
+    return _logits_out(values, h, cfg), new_groups

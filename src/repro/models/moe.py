@@ -1,0 +1,143 @@
+"""Mixture-of-Experts FFN with grouped capacity dispatch.
+
+Tokens are reshaped into G groups aligned with the batch sharding
+(GShard-style). All routing (top-k, per-group/per-expert position
+cumsum) and the dispatch scatter are *batched over the group dim*, so
+GSPMD keeps them shard-local — no collective fallback. The expert
+einsums run on a buffer sharded (groups→fsdp, experts→tp): compute is
+sharded over the full 256-chip mesh. The combine gathers each token's
+expert outputs back across the tp axis (an all-gather of the expert
+output buffer — see EXPERIMENTS.md §Perf for the measured cost and the
+shard_map all-to-all follow-up).
+
+Capacity semantics are standard: per-(group, expert) capacity
+C_g = ceil(tokens_per_group · top_k · capacity_factor / E), overflow
+tokens dropped (aux load-balance loss keeps routing even).
+
+History (dry-run profile driven, §Perf iteration C): a flat (E, C, d)
+buffer left capacity UNsharded — every device computed the full global
+capacity for its experts (16× redundant FLOPs, useful ratio 0.12); the
+first fix (capacity→fsdp constraint) made XLA implement the scatter as
+an 8 TB/device all-reduce. The grouped formulation fixes both.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import COMPUTE_DTYPE, fanin, matmul
+from .sharding import constrain
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    d, fe = cfg.d_model, cfg.d_expert
+    e = cfg.n_experts
+    kr, kg, ku, kd, ks = jax.random.split(key, 5)
+    p = {
+        # router is tiny: keep it replicated so routing is computed
+        # identically (and locally) on every shard
+        "router": fanin(kr, (d, e), (None, None)),
+        "w_gate": fanin(kg, (e, d, fe), ("exp", "fsdp", None), fan_axis=1),
+        "w_up": fanin(ku, (e, d, fe), ("exp", "fsdp", None), fan_axis=1),
+        "w_down": fanin(kd, (e, fe, d), ("exp", None, "fsdp"), fan_axis=1),
+    }
+    if cfg.n_shared:
+        from .layers import init_mlp
+
+        p["shared"] = init_mlp(ks, d, cfg.n_shared * fe)
+    return p
+
+
+def n_groups(cfg: ModelConfig, tokens: int) -> int:
+    """Dispatch groups: enough to cover the widest batch sharding
+    (pod×data = 32) while dividing the token count."""
+    g = 32
+    while tokens % g:
+        g //= 2
+    return max(g, 1)
+
+
+def capacity(cfg: ModelConfig, tokens_per_group: int) -> int:
+    c = int(
+        tokens_per_group * cfg.top_k * cfg.capacity_factor / cfg.n_experts
+    )
+    return max(8, -(-c // 8) * 8)
+
+
+def moe(params, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    B, S, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = n_groups(cfg, T)
+    Tg = T // G
+    C = capacity(cfg, Tg)
+
+    x = constrain(x, "batch", None, None)
+    xg = x.reshape(G, Tg, d)
+    xg = constrain(xg, "fsdp", None, None)
+
+    logits = jnp.einsum(
+        "gtd,de->gte", xg.astype(jnp.float32),
+        params["router"].astype(jnp.float32),
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)  # (G, Tg, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = top_i.reshape(G, Tg * k)
+    oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)  # (G, Tg*k, E)
+    pos = jnp.take_along_axis(
+        jnp.cumsum(oh, axis=1) - 1, flat_e[..., None], axis=2
+    )[..., 0]                                          # (G, Tg*k)
+    keep = pos < C
+    slot = jnp.where(keep, pos, C)  # C = out-of-bounds -> dropped
+
+    x_rep = jnp.repeat(
+        xg[:, :, None, :], k, axis=2
+    ).reshape(G, Tg * k, d)
+
+    def scatter_group(e_ids, slots, vals):
+        buf = jnp.zeros((e, C, d), COMPUTE_DTYPE)
+        return buf.at[e_ids, slots].add(
+            vals.astype(COMPUTE_DTYPE), mode="drop"
+        )
+
+    buf = jax.vmap(scatter_group)(flat_e, slot, x_rep)  # (G, E, C, d)
+    buf = constrain(buf, "fsdp", "exp", None, None)
+
+    # expert einsums in 3D batched form (e batch, rows = G·C with the
+    # group dim leading so the fsdp row sharding survives the merge)
+    rows = buf.transpose(1, 0, 2, 3).reshape(e, G * C, d)
+    rows = constrain(rows, "exp", "fsdp", None)
+    g_ = matmul(rows, params["w_gate"], "ecd,edf->ecf")
+    u = matmul(rows, params["w_up"], "ecd,edf->ecf")
+    h = jax.nn.silu(g_.astype(jnp.float32)).astype(u.dtype) * u
+    out_rows = matmul(h, params["w_down"], "ecf,efd->ecd")
+    out_rows = constrain(out_rows, "exp", "fsdp", None)
+    out_buf = out_rows.reshape(e, G, C, d).transpose(1, 0, 2, 3)
+    out_buf = constrain(out_buf, "fsdp", "exp", None, None)
+
+    def gather_group(ob, e_ids, slots):
+        return ob[e_ids, jnp.minimum(slots, C - 1)]
+
+    gathered = jax.vmap(gather_group)(out_buf, flat_e, slot)  # (G,Tg*k,d)
+    w = (top_w.reshape(G, Tg * k) * keep).astype(COMPUTE_DTYPE)
+    y = (gathered * w[..., None]).reshape(G, Tg, k, d).sum(axis=2)
+    y = y.reshape(B, S, d)
+
+    if cfg.n_shared:
+        from .layers import mlp
+
+        y = y + mlp(params["shared"], x)
+
+    # load-balance auxiliary loss (Switch/GShard form)
+    me = probs.reshape(T, e).mean(axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[flat_e.reshape(-1)].add(1.0) / (
+        T * k
+    )
+    aux = (me * ce).sum() * e * cfg.router_aux_weight
+    return constrain(y, "batch", None, None), aux

@@ -1,0 +1,152 @@
+"""Griffin/RecurrentGemma recurrent block: gated temporal conv + RG-LRU.
+
+Train/prefill uses jax.lax.associative_scan over the sequence (the linear
+recurrence h_t = a_t h_{t-1} + b_t is associative), so the TPU executes a
+log-depth parallel scan instead of a length-S loop. Decode carries
+(h, conv window) state — O(1) per token, which is what makes the
+long_500k cell sub-quadratic for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import COMPUTE_DTYPE, Param, fanin, matmul, zeros
+from .sharding import constrain
+
+RG_LRU_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    dr = cfg.d_rnn or d
+    nh = cfg.n_heads
+    dh = dr // nh
+    cw = cfg.conv_width
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    # Lambda init so a = sigmoid(L)^c lands in [0.9, 0.999] (Griffin A.2)
+    lam = jnp.log(jnp.linspace(0.9, 0.999, dr) ** (1.0 / RG_LRU_C))
+    lam = lam - jnp.log1p(-jnp.exp(lam))  # logit
+    return {
+        "w_x": fanin(k1, (d, dr), ("fsdp", "tp")),
+        "w_gate": fanin(k2, (d, dr), ("fsdp", "tp")),
+        "conv_w": fanin(k3, (cw, dr), (None, "tp"), fan_axis=0),
+        "conv_b": zeros((dr,), ("tp",)),
+        # Griffin: input/recurrence gates are block-diagonal per head
+        "w_r": fanin(k4, (nh, dh, dh), ("heads", None, None), fan_axis=1),
+        "w_i": fanin(k5, (nh, dh, dh), ("heads", None, None), fan_axis=1),
+        "b_r": zeros((dr,), (None,)),
+        "b_i": zeros((dr,), (None,)),
+        "lam": Param(lam.astype(jnp.float32), (None,)),
+        "w_out": fanin(k6, (dr, d), ("tp", "fsdp")),
+    }
+
+
+def _blockdiag(u, w):
+    """(..., nh*dh) @ block-diag (nh, dh, dh) -> (..., nh*dh), f32."""
+    nh, dh, _ = w.shape
+    uh = u.reshape(*u.shape[:-1], nh, dh)
+    out = jnp.einsum("...hd,hde->...he", uh, w.astype(jnp.float32))
+    return out.reshape(*u.shape)
+
+
+def _gates(params, u):
+    """RG-LRU gate computations in f32. u: (..., dr)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(_blockdiag(uf, params["w_r"]) + params["b_r"])
+    i = jax.nn.sigmoid(_blockdiag(uf, params["w_i"]) + params["b_i"])
+    log_a = -RG_LRU_C * r * jax.nn.softplus(params["lam"])  # <= 0
+    a = jnp.exp(log_a)
+    sqrt1m = jnp.sqrt(-jnp.expm1(2.0 * log_a))  # sqrt(1 - a^2), stable
+    b = sqrt1m * i * uf
+    return a, b
+
+
+def rglru(params, x, positions, cfg: ModelConfig):
+    """Train/prefill. x: (B, S, d)."""
+    del positions
+    cw = cfg.conv_width
+    u = matmul(x, params["w_x"], "bsd,dr->bsr")
+    g = jax.nn.gelu(
+        matmul(x, params["w_gate"], "bsd,dr->bsr").astype(jnp.float32)
+    )
+    # causal depthwise temporal conv (width cw)
+    pad = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    conv = sum(
+        pad[:, i : i + u.shape[1]] * params["conv_w"][i]
+        for i in range(cw)
+    ) + params["conv_b"].astype(u.dtype)
+    conv = constrain(conv, "batch", None, "tp")
+    a, b = _gates(params, conv)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h * g).astype(COMPUTE_DTYPE)
+    return matmul(y, params["w_out"], "bsr,rd->bsd")
+
+
+def rglru_decode(params, x, cache, pos, cfg: ModelConfig):
+    """Decode step. cache: {h: (B, dr) f32, conv: (B, cw-1, dr)}."""
+    del pos
+    cw = cfg.conv_width
+    u = matmul(x, params["w_x"], "bsd,dr->bsr")  # (B, 1, dr)
+    g = jax.nn.gelu(
+        matmul(x, params["w_gate"], "bsd,dr->bsr").astype(jnp.float32)
+    )[:, 0]
+    window = jnp.concatenate(
+        [cache["conv"], u.astype(cache["conv"].dtype)], axis=1
+    )  # (B, cw, dr)
+    conv = jnp.einsum(
+        "bcr,cr->br", window.astype(jnp.float32),
+        params["conv_w"].astype(jnp.float32),
+    ) + params["conv_b"]
+    a, b = _gates(params, conv)
+    h = a * cache["h"] + b
+    y = (h * g).astype(COMPUTE_DTYPE)[:, None]
+    out = matmul(y, params["w_out"], "bsr,rd->bsd")
+    return out, {"h": h, "conv": window[:, 1:]}
+
+
+def rglru_cache_shape(cfg: ModelConfig, batch: int, seq: int):
+    dr = cfg.d_rnn or cfg.d_model
+    return {
+        "h": ((batch, dr), ("batch", "tp"), jnp.float32),
+        "conv": (
+            (batch, cfg.conv_width - 1, dr),
+            ("batch", None, "tp"),
+            jnp.float32,
+        ),
+    }
+
+
+def rglru_prefill(params, x, positions, cfg: ModelConfig, cache_len: int):
+    """Forward + final recurrent state for decode continuation."""
+    del cache_len
+    cw = cfg.conv_width
+    u = matmul(x, params["w_x"], "bsd,dr->bsr")
+    g = jax.nn.gelu(
+        matmul(x, params["w_gate"], "bsd,dr->bsr").astype(jnp.float32)
+    )
+    pad = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    conv = sum(
+        pad[:, i : i + u.shape[1]] * params["conv_w"][i] for i in range(cw)
+    ) + params["conv_b"].astype(u.dtype)
+    conv = constrain(conv, "batch", None, "tp")
+    a, b = _gates(params, conv)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h * g).astype(COMPUTE_DTYPE)
+    out = matmul(y, params["w_out"], "bsr,rd->bsd")
+    # decode resumes with the last cw-1 raw (pre-conv) inputs
+    conv_cache = u[:, -(cw - 1) :].astype(jnp.float32)
+    return out, {"h": h[:, -1].astype(jnp.float32), "conv": conv_cache}

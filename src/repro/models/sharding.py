@@ -1,0 +1,112 @@
+"""Logical-axis sharding rules.
+
+Params and activations are annotated with *logical* axis names; a Rules
+object (built from the physical mesh) maps them to mesh axes. Resolution
+is shape-aware: a logical axis is dropped (replicated) for a dim that is
+not divisible by the mapped mesh-axis product, or whose mesh axes are
+already used by an earlier dim of the same array. This one rule uniformly
+handles kv_heads < tp (MQA), head counts not divisible by 16 (heads spec
+falls through to the head_dim spec), global_batch=1 long-context decode,
+and the pod axis appearing only in multi-pod meshes.
+
+Train rules:  batch=(pod,data)  fsdp=(data)  tp/seq/exp/heads/hd=(model)
+Serve rules:  same but fsdp=None — params are TP-sharded and replicated
+              across the data axis (no per-step FSDP all-gathers while
+              decoding).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LogicalSpec = Tuple[Optional[str], ...]
+
+_TLS = threading.local()
+
+
+class Rules:
+    def __init__(self, mapping: Dict[str, Tuple[str, ...]], mesh: Mesh):
+        self.mapping = mapping
+        self.mesh = mesh
+        self.sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def physical(self, name: Optional[str]) -> Tuple[str, ...]:
+        if name is None:
+            return ()
+        return tuple(a for a in self.mapping.get(name, ()) if a in self.sizes)
+
+    def resolve(self, shape: Sequence[int], spec: LogicalSpec) -> P:
+        assert len(spec) == len(shape), (spec, shape)
+        used = set()
+        out = []
+        for dim, name in zip(shape, spec):
+            phys = self.physical(name)
+            prod = 1
+            for a in phys:
+                prod *= self.sizes[a]
+            if (
+                phys
+                and not (set(phys) & used)
+                and prod > 1
+                and dim % prod == 0
+            ):
+                used.update(phys)
+                out.append(phys if len(phys) > 1 else phys[0])
+            else:
+                out.append(None)
+        return P(*out)
+
+    def sharding(self, shape: Sequence[int], spec: LogicalSpec):
+        return NamedSharding(self.mesh, self.resolve(shape, spec))
+
+
+def train_rules(mesh: Mesh) -> Rules:
+    return Rules(
+        {
+            "batch": ("pod", "data"),
+            "fsdp": ("data",),
+            "tp": ("model",),
+            "seq": ("model",),
+            "exp": ("model",),
+            "heads": ("model",),
+            "hd": ("model",),
+            "vocab": ("model",),
+        },
+        mesh,
+    )
+
+
+def serve_rules(mesh: Mesh) -> Rules:
+    r = train_rules(mesh)
+    r.mapping = dict(r.mapping, fsdp=())
+    return r
+
+
+# --------------------------------------------------------------------- #
+# trace-time context: `constrain` is a no-op outside `axis_rules(...)`,
+# so model code runs unmodified in single-device smoke tests.
+@contextlib.contextmanager
+def axis_rules(rules: Optional[Rules]):
+    prev = getattr(_TLS, "rules", None)
+    _TLS.rules = rules
+    try:
+        yield
+    finally:
+        _TLS.rules = prev
+
+
+def current_rules() -> Optional[Rules]:
+    return getattr(_TLS, "rules", None)
+
+
+def constrain(x: jax.Array, *spec: Optional[str]) -> jax.Array:
+    rules = current_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, rules.sharding(x.shape, tuple(spec))
+    )

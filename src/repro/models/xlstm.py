@@ -1,0 +1,336 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM
+(scalar memory with recurrent gate connections).
+
+TPU adaptation: the mLSTM trains in *chunkwise-parallel* form — intra-
+chunk interactions are a masked quadratic (MXU-friendly, like attention
+over a chunk) and inter-chunk state flows through a short lax.scan over
+chunks; decode is the O(1) recurrent update on the (dh × dh) matrix
+memory. The sLSTM is inherently sequential (recurrent connections
+through h_{t-1}) and runs as a lax.scan over time; its per-step cost is
+tiny relative to the mLSTM blocks.
+
+Gate stabilization: input gates are exp(clamped pre-activation); forget
+gates are sigmoid in log space (logsigmoid <= 0) so all decay products
+stay in [0, 1].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import COMPUTE_DTYPE, Param, fanin, matmul, rms_norm, zeros
+from .sharding import constrain
+
+I_CLAMP = 10.0
+MLSTM_PF = 2       # mLSTM up-projection factor
+SLSTM_PF = 4 / 3   # sLSTM post-FFN factor
+
+
+# ===================================================================== #
+# mLSTM
+# ===================================================================== #
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    di = MLSTM_PF * d
+    nh = cfg.n_heads
+    k1, k2, k3, k4, k5, k6, k7 = jax.random.split(key, 7)
+    return {
+        "w_up": fanin(k1, (d, 2 * di), ("fsdp", "tp")),
+        "wq": fanin(k2, (di, di), ("tp", None)),
+        "wk": fanin(k3, (di, di), ("tp", None)),
+        "wv": fanin(k4, (di, di), ("tp", None)),
+        "w_i": fanin(k5, (di, nh), ("tp", None)),
+        "w_f": fanin(k6, (di, nh), ("tp", None)),
+        "b_i": zeros((nh,), (None,)),
+        "b_f": zeros((nh,), (None,)),
+        "norm": Param(jnp.ones((di,), jnp.float32), (None,)),
+        "w_down": fanin(k7, (di, d), ("tp", "fsdp")),
+    }
+
+
+def _mlstm_qkvif(params, x, cfg: ModelConfig):
+    d = cfg.d_model
+    di = MLSTM_PF * d
+    nh = cfg.n_heads
+    dh = di // nh
+    up = matmul(x, params["w_up"], "bsd,de->bse")
+    x_in, z = up[..., :di], up[..., di:]
+    x_in = constrain(x_in, "batch", None, "tp")
+    B, S = x.shape[:2]
+    q = matmul(x_in, params["wq"], "bse,ef->bsf").reshape(B, S, nh, dh)
+    k = matmul(x_in, params["wk"], "bse,ef->bsf").reshape(B, S, nh, dh)
+    k = k * dh ** -0.5
+    v = matmul(x_in, params["wv"], "bse,ef->bsf").reshape(B, S, nh, dh)
+    i_pre = jnp.einsum(
+        "bse,eh->bsh", x_in.astype(jnp.float32),
+        params["w_i"].astype(jnp.float32),
+    ) + params["b_i"]
+    f_pre = jnp.einsum(
+        "bse,eh->bsh", x_in.astype(jnp.float32),
+        params["w_f"].astype(jnp.float32),
+    ) + params["b_f"]
+    i_gate = jnp.exp(jnp.minimum(i_pre, I_CLAMP))
+    log_f = jax.nn.log_sigmoid(f_pre)
+    return q, k, v, i_gate, log_f, z
+
+
+def _mlstm_out(params, h, z, cfg: ModelConfig):
+    B, S = z.shape[:2]
+    di = MLSTM_PF * cfg.d_model
+    h = h.reshape(B, S, di)
+    h = rms_norm(h.astype(COMPUTE_DTYPE), params["norm"], cfg.norm_eps)
+    y = h * jax.nn.silu(z.astype(jnp.float32)).astype(h.dtype)
+    return matmul(y, params["w_down"], "bse,ed->bsd")
+
+
+def _mlstm_chunk_step(carry, xs):
+    """One chunkwise-parallel mLSTM step (shared by train & prefill)."""
+    C0, n0 = carry  # (B, nh, dh, dh) f32, (B, nh, dh) f32
+    qc, kc, vc, ic, lfc = xs
+    Cc = qc.shape[1]
+    lcum = jnp.cumsum(lfc, axis=1)  # (B, Cc, nh) decay from chunk start
+    # intra-chunk masked quadratic. Mask BEFORE exp: masked (tau > t)
+    # entries have rel > 0 and exp(rel) overflows, which poisons the
+    # backward of where() with 0*inf = nan.
+    rel = lcum[:, :, None, :] - lcum[:, None, :, :]  # t, tau
+    t_idx = jnp.arange(Cc)
+    causal = t_idx[:, None] >= t_idx[None, :]
+    rel = jnp.where(causal[None, :, :, None], rel, -1e9)
+    w_in = jnp.exp(rel) * ic[:, None]  # (B, Cc, Cc, nh)
+    scores = jnp.einsum(
+        "bthd,bshd->btsh", qc.astype(jnp.float32),
+        kc.astype(jnp.float32),
+    ) * w_in
+    y_intra = jnp.einsum(
+        "btsh,bshd->bthd", scores, vc.astype(jnp.float32)
+    )
+    # normalizer: n_t = decay_t * n0 + sum_tau w_in[t,tau] * k_tau
+    n_in = jnp.einsum(
+        "btsh,bshd->bthd", w_in, kc.astype(jnp.float32)
+    )
+    decay_t = jnp.exp(lcum)  # (B, Cc, nh)
+    y_inter = jnp.einsum(
+        "bthd,bhde->bthe", qc.astype(jnp.float32) * decay_t[..., None],
+        C0,
+    )
+    n_t = decay_t[..., None] * n0[:, None] + n_in
+    y = y_intra + y_inter  # (B, Cc, nh, dh)
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bthd,bthd->bth", qc.astype(jnp.float32), n_t)),
+        1.0,
+    )
+    y = y / denom[..., None]
+    # chunk state update
+    F = lcum[:, -1]  # (B, nh) total chunk decay
+    wC = jnp.exp(F[:, None] - lcum) * ic  # (B, Cc, nh)
+    C_new = jnp.exp(F)[..., None, None] * C0 + jnp.einsum(
+        "bshd,bshe->bhde", kc.astype(jnp.float32) * wC[..., None],
+        vc.astype(jnp.float32),
+    )
+    n_new = jnp.exp(F)[..., None] * n0 + jnp.einsum(
+        "bsh,bshd->bhd", wC, kc.astype(jnp.float32)
+    )
+    return (C_new, n_new), y.astype(COMPUTE_DTYPE)
+
+
+def _mlstm_resh(t, nc: int, Cc: int):
+    """(B, S, nh, ...) -> (nc, B, Cc, nh, ...)."""
+    B = t.shape[0]
+    return t.reshape(B, nc, Cc, *t.shape[2:]).transpose(
+        1, 0, 2, *range(3, t.ndim + 1)
+    )
+
+
+def mlstm(params, x, positions, cfg: ModelConfig, chunk: int = 256):
+    """Chunkwise-parallel mLSTM. x: (B, S, d)."""
+    del positions
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    dh = MLSTM_PF * d // nh
+    q, k, v, i_gate, log_f, z = _mlstm_qkvif(params, x, cfg)
+    Cc = min(chunk, S)
+    assert S % Cc == 0
+    nc = S // Cc
+    xs = tuple(_mlstm_resh(t, nc, Cc) for t in (q, k, v, i_gate, log_f))
+    C0 = jnp.zeros((B, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, nh, dh), jnp.float32)
+    step = (
+        jax.checkpoint(_mlstm_chunk_step) if cfg.inner_remat
+        else _mlstm_chunk_step
+    )
+    (_, _), ys = jax.lax.scan(step, (C0, n0), xs)
+    h = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, nh, dh)
+    return _mlstm_out(params, h, z, cfg)
+
+
+def mlstm_decode(params, x, cache, pos, cfg: ModelConfig):
+    """O(1) recurrent decode. cache: {C: (B,nh,dh,dh), n: (B,nh,dh)}."""
+    del pos
+    q, k, v, i_gate, log_f, z = _mlstm_qkvif(params, x, cfg)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]  # (B, nh, dh)
+    ig, lf = i_gate[:, 0], log_f[:, 0]  # (B, nh)
+    f = jnp.exp(lf)
+    C = f[..., None, None] * cache["C"] + ig[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    n = f[..., None] * cache["n"] + ig[..., None] * k.astype(jnp.float32)
+    y = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), C)
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n)), 1.0
+    )
+    h = (y / denom[..., None])[:, None]  # (B, 1, nh, dh)
+    out = _mlstm_out(params, h.astype(COMPUTE_DTYPE), z, cfg)
+    return out, {"C": C, "n": n}
+
+
+def mlstm_cache_shape(cfg: ModelConfig, batch: int, seq: int):
+    del seq
+    nh = cfg.n_heads
+    dh = MLSTM_PF * cfg.d_model // nh
+    return {
+        "C": ((batch, nh, dh, dh), ("batch", "heads", None, None), jnp.float32),
+        "n": ((batch, nh, dh), ("batch", "heads", None), jnp.float32),
+    }
+
+
+# ===================================================================== #
+# sLSTM
+# ===================================================================== #
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    dh = d // nh
+    f2 = int(2 * round(SLSTM_PF * d / 2))
+    keys = jax.random.split(key, 10)
+    p = {}
+    for idx, gate in enumerate(("z", "i", "f", "o")):
+        p[f"w_{gate}"] = fanin(keys[idx], (d, d), ("fsdp", "tp"))
+        p[f"r_{gate}"] = fanin(
+            keys[4 + idx], (nh, dh, dh), (None, None, None), fan_axis=1
+        )
+        p[f"b_{gate}"] = zeros((d,), (None,))
+    p["w_ffn1"] = fanin(keys[8], (d, 2 * f2), ("fsdp", "tp"))
+    p["w_ffn2"] = fanin(keys[9], (f2, d), ("tp", "fsdp"))
+    return p
+
+
+def _slstm_step(params, cfg: ModelConfig, carry, x_t):
+    """One sLSTM time step. x_t: (B, d) pre-activations W·x (4, B, d)."""
+    c, n, h, m = carry  # (B, d) f32 each
+    nh = cfg.n_heads
+    dh = cfg.d_model // nh
+    B = c.shape[0]
+
+    def rec(gate):
+        hh = h.reshape(B, nh, dh)
+        return jnp.einsum(
+            "bhd,hde->bhe", hh, params[f"r_{gate}"].astype(jnp.float32)
+        ).reshape(B, nh * dh)
+
+    zx, ix, fx, ox = x_t
+    z = jnp.tanh(zx + rec("z"))
+    i_pre = ix + rec("i")
+    f_pre = fx + rec("f")
+    o = jax.nn.sigmoid(ox + rec("o"))
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m, jnp.minimum(i_pre, I_CLAMP))
+    i_g = jnp.exp(jnp.minimum(i_pre, I_CLAMP) - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c_new = f_g * c + i_g * z
+    n_new = jnp.maximum(f_g * n + i_g, 1e-6)
+    h_new = o * c_new / n_new
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def _slstm_preact(params, x):
+    out = []
+    for gate in ("z", "i", "f", "o"):
+        out.append(
+            jnp.einsum(
+                "bsd,de->bse", x.astype(jnp.float32),
+                params[f"w_{gate}"].astype(jnp.float32),
+            ) + params[f"b_{gate}"]
+        )
+    return jnp.stack(out)  # (4, B, S, d)
+
+
+def slstm(params, x, positions, cfg: ModelConfig):
+    """Sequential sLSTM over time + gated post-FFN. x: (B, S, d)."""
+    del positions
+    B, S, d = x.shape
+    pre = _slstm_preact(params, x)  # (4, B, S, d)
+    carry = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(4))
+    body = lambda c, xt: _slstm_step(params, cfg, c, xt)
+    if cfg.inner_remat:
+        body = jax.checkpoint(body)
+    carry, hs = jax.lax.scan(
+        body,
+        carry,
+        pre.transpose(2, 0, 1, 3),  # (S, 4, B, d)
+    )
+    h = hs.transpose(1, 0, 2).astype(COMPUTE_DTYPE)  # (B, S, d)
+    return _slstm_ffn(params, h)
+
+
+def _slstm_ffn(params, h):
+    up = matmul(h, params["w_ffn1"], "bsd,de->bse")
+    f2 = up.shape[-1] // 2
+    g, u = up[..., :f2], up[..., f2:]
+    y = jax.nn.silu(g.astype(jnp.float32)).astype(u.dtype) * u
+    return matmul(y, params["w_ffn2"], "bse,ed->bsd")
+
+
+def slstm_decode(params, x, cache, pos, cfg: ModelConfig):
+    """Decode step. cache: {c,n,h,m: (B, d) f32}."""
+    del pos
+    pre = _slstm_preact(params, x)[:, :, 0]  # (4, B, d)
+    carry = (cache["c"], cache["n"], cache["h"], cache["m"])
+    carry, h = _slstm_step(params, cfg, carry, pre)
+    out = _slstm_ffn(params, h[:, None].astype(COMPUTE_DTYPE))
+    c, n, hh, m = carry
+    return out, {"c": c, "n": n, "h": hh, "m": m}
+
+
+def slstm_cache_shape(cfg: ModelConfig, batch: int, seq: int):
+    del seq
+    d = cfg.d_model
+    return {
+        k: ((batch, d), ("batch", "tp"), jnp.float32)
+        for k in ("c", "n", "h", "m")
+    }
+
+
+def mlstm_prefill(params, x, positions, cfg: ModelConfig, cache_len: int):
+    """Forward + final (C, n) matrix-memory state."""
+    del positions, cache_len
+    B, S, d = x.shape
+    nh = cfg.n_heads
+    dh = MLSTM_PF * d // nh
+    q, k, v, i_gate, log_f, z = _mlstm_qkvif(params, x, cfg)
+    Cc = min(256, S)
+    assert S % Cc == 0
+    nc = S // Cc
+    xs = tuple(_mlstm_resh(t, nc, Cc) for t in (q, k, v, i_gate, log_f))
+    C0 = jnp.zeros((B, nh, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, nh, dh), jnp.float32)
+    (Cf, nf), ys = jax.lax.scan(_mlstm_chunk_step, (C0, n0), xs)
+    h = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, nh, dh)
+    out = _mlstm_out(params, h, z, cfg)
+    return out, {"C": Cf, "n": nf}
+
+
+def slstm_prefill(params, x, positions, cfg: ModelConfig, cache_len: int):
+    del cache_len
+    B, S, d = x.shape
+    pre = _slstm_preact(params, x)
+    carry = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(4))
+    carry, hs = jax.lax.scan(
+        lambda c, xt: _slstm_step(params, cfg, c, xt),
+        carry,
+        pre.transpose(2, 0, 1, 3),
+    )
+    h = hs.transpose(1, 0, 2).astype(COMPUTE_DTYPE)
+    out = _slstm_ffn(params, h)
+    c, n, hh, m = carry
+    return out, {"c": c, "n": n, "h": hh, "m": m}

@@ -1,0 +1,73 @@
+"""Serving engine: prefill + batched decode with a persistent cache.
+
+The engine drives the same model functions the dry-run lowers
+(model.prefill / model.decode_step); on a mesh the params/cache carry
+NamedShardings and these calls are pjit'd SPMD programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Engine:
+    cfg: ModelConfig
+    values: Any
+    cache_len: int
+    _prefill: Callable = None
+    _decode: Callable = None
+
+    def __post_init__(self):
+        cfg, cache_len = self.cfg, self.cache_len
+
+        def prefill_fn(values, tokens):
+            return model_lib.prefill(values, tokens, cfg, cache_len)
+
+        def decode_fn(values, cache, tok, pos):
+            return model_lib.decode_step(values, cache, tok, pos, cfg)
+
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+
+    def generate(
+        self,
+        prompt: jax.Array,           # (B, S) int32
+        max_new_tokens: int,
+        temperature: float = 0.0,
+        key: Optional[jax.Array] = None,
+        capture_hidden: bool = False,
+    ) -> Tuple[np.ndarray, List[np.ndarray]]:
+        """Greedy/temperature decode. Returns (tokens (B, new), per-step
+        last-layer logits if capture_hidden)."""
+        B, S = prompt.shape
+        logits, cache = self._prefill(self.values, prompt)
+        last = logits[:, -1]
+        out = []
+        captured = []
+        key = key if key is not None else jax.random.PRNGKey(0)
+        for i in range(max_new_tokens):
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(
+                    sub, last.astype(jnp.float32) / temperature, axis=-1
+                )
+            else:
+                tok = jnp.argmax(last, axis=-1)
+            tok = tok.astype(jnp.int32)[:, None]
+            out.append(np.asarray(tok))
+            if capture_hidden:
+                captured.append(np.asarray(last, dtype=np.float32))
+            logits, cache = self._decode(
+                self.values, cache, tok, jnp.int32(S + i)
+            )
+            last = logits[:, -1]
+        return np.concatenate(out, axis=1), captured

@@ -1,0 +1,80 @@
+"""Retrieval-augmented serving: the paper's constrained-NN search as a
+first-class feature of the LM stack (kNN-LM style).
+
+A datastore maps hidden states (keys) -> next tokens (values). At decode
+time the engine queries the ball*-tree for the K nearest stored states
+WITHIN RADIUS r of the current hidden state — the paper's
+range-constrained KNN (§4.3) is exactly the right primitive here: far-
+away neighbors are noise, so the range constraint both prunes the search
+(fewer nodes visited, Table 2) and gates interpolation quality.
+
+p(y) = (1 - lam_eff) * p_LM(y) + lam_eff * p_kNN(y),
+with lam_eff = lam * [any neighbor within r] and p_kNN a distance-
+softmax over retrieved values.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import TreeSpec, build
+from repro.core import search_jax as sj
+
+
+@dataclasses.dataclass
+class Datastore:
+    tree: object
+    dtree: object
+    stack: int
+    values: np.ndarray  # (N,) int32 next-token per stored state
+
+    @staticmethod
+    def from_pairs(
+        keys: np.ndarray, values: np.ndarray, leaf_size: int = 64,
+        backend: str = "jax",
+    ) -> "Datastore":
+        tree = build(keys, TreeSpec.ballstar(leaf_size=leaf_size), backend=backend)
+        return Datastore(
+            tree=tree,
+            dtree=sj.device_tree(tree),
+            stack=sj.max_depth(tree) + 3,
+            values=np.asarray(values, np.int32),
+        )
+
+    def lookup(self, queries: np.ndarray, k: int, r: float):
+        """Constrained NN over the datastore. Returns (token values
+        (Q, k), distances (Q, k), valid mask)."""
+        res = sj.constrained_knn(
+            self.dtree, jnp.asarray(queries, jnp.float32), r, k, self.stack
+        )
+        idx = np.asarray(res.indices)
+        valid = idx >= 0
+        vals = self.values[np.clip(idx, 0, len(self.values) - 1)]
+        return vals, np.asarray(res.distances), valid
+
+
+def knn_interpolate(
+    lm_probs: np.ndarray,   # (B, V)
+    neigh_vals: np.ndarray,  # (B, k) int32
+    neigh_dist: np.ndarray,  # (B, k)
+    valid: np.ndarray,       # (B, k) bool
+    lam: float = 0.25,
+    temp: float = 1.0,
+) -> np.ndarray:
+    """Mix LM and kNN distributions (kNN-LM, Khandelwal et al. form)."""
+    B, V = lm_probs.shape
+    out = lm_probs.copy()
+    for b in range(B):
+        m = valid[b]
+        if not m.any():
+            continue  # no neighbor within range: pure LM
+        w = np.exp(-neigh_dist[b][m] / temp)
+        w = w / w.sum()
+        knn = np.zeros(V)
+        np.add.at(knn, neigh_vals[b][m], w)
+        out[b] = (1 - lam) * lm_probs[b] + lam * knn
+    return out

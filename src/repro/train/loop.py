@@ -1,0 +1,130 @@
+"""Training loop with fault tolerance.
+
+Features exercised by examples/train_lm.py and tests:
+  * auto-resume from the latest checkpoint (params, opt, step — and the
+    data pipeline resumes at the same step, so restarts are exact);
+  * periodic atomic checkpoints (train.checkpoint);
+  * failure injection (`fail_at_step`) to test the restart path —
+    simulates a node loss mid-run;
+  * step-time watchdog: a step exceeding `straggler_factor` × the median
+    step time is logged as a straggler event (on real fleets this feeds
+    the scheduler's replace-node decision; here it is recorded in
+    metrics so the policy is testable);
+  * NaN/overflow guard: a non-finite loss aborts BEFORE the checkpoint
+    is polluted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+import jax
+
+from repro.data import tokens as data_lib
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+from repro.models.layers import split_params
+
+from . import checkpoint as ckpt_lib
+from . import optimizer as opt_lib
+from .step import make_train_step
+
+
+class InjectedFailure(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 100
+    ckpt_every: int = 25
+    ckpt_dir: str = "artifacts/ckpt"
+    keep_last: int = 3
+    log_every: int = 10
+    fail_at_step: int = -1       # failure injection (once, pre-checkpoint)
+    straggler_factor: float = 3.0
+    seed: int = 0
+
+
+def train(
+    cfg: ModelConfig,
+    loop: LoopConfig,
+    opt_cfg: Optional[opt_lib.AdamWConfig] = None,
+    global_batch: int = 8,
+    seq: int = 128,
+    log_fn: Callable[[str], None] = print,
+) -> Dict[str, Any]:
+    """Single-host reference loop (the pjit path drives the same
+    functions through launch/train.py). Returns final state + history."""
+    opt_cfg = opt_cfg or opt_lib.AdamWConfig(total_steps=loop.steps)
+    data_cfg = data_lib.DataConfig(
+        vocab=cfg.vocab,
+        seq=seq,
+        global_batch=global_batch,
+        seed=loop.seed,
+        embed_dim=cfg.d_model if cfg.frontend == "embeddings" else 0,
+    )
+
+    # ---- init or resume -------------------------------------------------- #
+    start_step = 0
+    values, _ = split_params(
+        model_lib.init_params(cfg, jax.random.PRNGKey(loop.seed))
+    )
+    opt_state = opt_lib.init(values)
+    last = ckpt_lib.latest(loop.ckpt_dir)
+    if last is not None:
+        restored = ckpt_lib.restore(
+            last, {"params": values, "opt": opt_state}
+        )
+        values, opt_state = restored["params"], restored["opt"]
+        start_step = ckpt_lib.manifest(last)["step"]
+        log_fn(f"[resume] step {start_step} from {last}")
+
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    history: List[Dict[str, float]] = []
+    step_times: List[float] = []
+    stragglers = 0
+
+    data = data_lib.stream(data_cfg, start_step=start_step)
+    for step in range(start_step, loop.steps):
+        batch = next(data)
+        if step == loop.fail_at_step:
+            raise InjectedFailure(f"injected node failure at step {step}")
+        t0 = time.perf_counter()
+        values, opt_state, metrics = step_fn(values, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        if not np.isfinite(loss):
+            raise FloatingPointError(f"non-finite loss at step {step}")
+        if len(step_times) >= 5:
+            med = float(np.median(step_times[-20:]))
+            if dt > loop.straggler_factor * med:
+                stragglers += 1
+                log_fn(
+                    f"[straggler] step {step}: {dt:.2f}s vs median {med:.2f}s"
+                )
+        step_times.append(dt)
+        history.append({"step": step, "loss": loss, "dt": dt})
+        if step % loop.log_every == 0:
+            log_fn(
+                f"step {step} loss {loss:.4f} "
+                f"gnorm {float(metrics['grad_norm']):.3f} {dt * 1e3:.0f}ms"
+            )
+        if (step + 1) % loop.ckpt_every == 0 or step + 1 == loop.steps:
+            ckpt_lib.save(
+                loop.ckpt_dir,
+                step + 1,
+                {"params": values, "opt": opt_state},
+                keep_last=loop.keep_last,
+                extra={"arch": cfg.name, "seq": seq,
+                       "global_batch": global_batch},
+            )
+    return {
+        "params": values,
+        "opt": opt_state,
+        "history": history,
+        "stragglers": stragglers,
+    }

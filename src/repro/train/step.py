@@ -1,0 +1,71 @@
+"""Train step factory: loss -> grads -> AdamW, with optional microbatch
+gradient accumulation (the cross-device gradient reduction then happens
+once per step instead of once per microbatch — the standard comm-volume
+optimization at large data-parallel scale)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.models.config import ModelConfig
+
+from . import optimizer as opt_lib
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: opt_lib.AdamWConfig,
+    accum_steps: int = 1,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). batch: {"inputs": (B, S[, d]), "labels": (B, S)}."""
+
+    def loss_fn(params, batch):
+        return model_lib.loss_fn(params, batch, cfg, training=True)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def single(params, batch):
+        (loss, metrics), grads = grad_fn(params, batch)
+        return loss, metrics, grads
+
+    def accumulated(params, batch):
+        def resh(x):
+            return x.reshape(accum_steps, x.shape[0] // accum_steps, *x.shape[1:])
+
+        micro = jax.tree.map(resh, batch)
+
+        def body(carry, mb):
+            loss_a, grads_a = carry
+            (loss, _), grads = grad_fn(params, mb)
+            return (
+                loss_a + loss,
+                jax.tree.map(jnp.add, grads_a, grads),
+            ), None
+
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (loss_sum, grads_sum), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zero), micro
+        )
+        inv = 1.0 / accum_steps
+        grads = jax.tree.map(lambda g: g * inv, grads_sum)
+        return loss_sum * inv, {}, grads
+
+    def train_step(params, opt_state, batch):
+        if accum_steps > 1:
+            loss, metrics, grads = accumulated(params, batch)
+        else:
+            loss, metrics, grads = single(params, batch)
+        params, opt_state, opt_metrics = opt_lib.update(
+            opt_cfg, grads, opt_state, params
+        )
+        out = {"loss": loss, **metrics, **opt_metrics}
+        return params, opt_state, out
+
+    return train_step

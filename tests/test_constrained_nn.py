@@ -1,0 +1,80 @@
+"""Paper §4.3 / Algorithm 2 specifics: the constrained-NN search must
+(1) return exactly the brute-force result, (2) visit no more nodes than
+either pure strategy it hybridizes, reproducing the Table 2 effect."""
+import numpy as np
+import pytest
+
+from repro.core import TreeSpec, brute, build
+from repro.core import search_host as sh
+from repro.data.synthetic import SYNTHETIC, make, uniform_queries
+
+
+@pytest.fixture(scope="module")
+def setup():
+    pts = make("highleyman", 4000, seed=0)
+    tree = build(pts, TreeSpec.ballstar(leaf_size=16))
+    queries = uniform_queries(pts, 25, seed=1)
+    return pts, tree, queries
+
+
+def test_sound_prune_beats_knn_then_filter(setup):
+    """Table 2: constrained NN visits far fewer nodes than KNN+filter."""
+    pts, tree, queries = setup
+    r = 0.5
+    cnn = sum(
+        sh.constrained_knn(tree, q, 10, r).nodes_visited for q in queries
+    )
+    knnf = sum(
+        sh.knn_then_filter(tree, q, 10, r).nodes_visited for q in queries
+    )
+    assert cnn < knnf
+
+
+def test_constrained_subset_of_knn_filter(setup):
+    pts, tree, queries = setup
+    r = 0.5
+    for q in queries[:10]:
+        a = sh.constrained_knn(tree, q, 10, r)
+        bi, bd = brute.constrained_knn(pts, q, 10, r)
+        np.testing.assert_allclose(a.distances, bd, rtol=1e-9)
+
+
+def test_and_prune_visits_at_least_or_prune(setup):
+    """The pseudocode's literal ∧ prune is weaker (visits >= the sound ∨
+    prune) but still returns correct results (both prune conditions are
+    individually sound)."""
+    pts, tree, queries = setup
+    r = 0.5
+    for q in queries[:10]:
+        a = sh.constrained_knn(tree, q, 8, r, prune="or")
+        b = sh.constrained_knn(tree, q, 8, r, prune="and")
+        assert b.nodes_visited >= a.nodes_visited
+        np.testing.assert_allclose(a.distances, b.distances, rtol=1e-9)
+
+
+def test_infinite_range_equals_knn(setup):
+    """With r = inf, Algorithm 2 degenerates to Liu et al. KNN."""
+    pts, tree, queries = setup
+    for q in queries[:10]:
+        a = sh.constrained_knn(tree, q, 6, np.inf)
+        b = sh.knn_search(tree, q, 6)
+        np.testing.assert_allclose(a.distances, b.distances, rtol=1e-9)
+        assert a.nodes_visited == b.nodes_visited
+
+
+@pytest.mark.parametrize("dataset", sorted(SYNTHETIC))
+def test_table2_direction_per_distribution(dataset):
+    """Constrained NN <= KNN-then-filter node visits on each of the
+    paper's five synthetic distributions."""
+    pts = make(dataset, 3000, seed=2)
+    tree = build(pts, TreeSpec.ballstar(leaf_size=16))
+    queries = uniform_queries(pts, 15, seed=3)
+    scale = float(np.linalg.norm(pts.std(axis=0)))
+    r = 0.2 * scale
+    cnn = sum(
+        sh.constrained_knn(tree, q, 10, r).nodes_visited for q in queries
+    )
+    knnf = sum(
+        sh.knn_then_filter(tree, q, 10, r).nodes_visited for q in queries
+    )
+    assert cnn <= knnf

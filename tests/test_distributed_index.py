@@ -1,0 +1,43 @@
+"""Sharded ball*-tree (shard_map scatter-gather) must be exactly equal
+to brute force — run on 4 forced host devices in a subprocess."""
+import os
+import subprocess
+import sys
+import textwrap
+
+
+def test_sharded_constrained_knn_exact():
+    code = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.core import TreeSpec, brute, distributed
+
+        rng = np.random.default_rng(0)
+        pts = rng.standard_normal((4000, 3))
+        mesh = Mesh(np.array(jax.devices()).reshape(4, 1), ("data", "model"))
+        index = distributed.build_sharded(pts, mesh, TreeSpec.ballstar(leaf_size=16))
+        queries = rng.standard_normal((32, 3))
+        k, r = 8, 1.0
+        idx, dist = distributed.constrained_knn(index, queries, k, r)
+        for i in range(32):
+            bi, bd = brute.constrained_knn(pts, queries[i], k, r)
+            got = idx[i][idx[i] >= 0]
+            assert np.array_equal(np.sort(got), np.sort(bi)), (i, got, bi)
+            np.testing.assert_allclose(
+                dist[i][: len(bd)], bd, rtol=1e-4, atol=1e-5
+            )
+        print("SHARDED_OK")
+        """
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert "SHARDED_OK" in out.stdout, out.stdout + "\n" + out.stderr

@@ -1,0 +1,98 @@
+"""The while-aware HLO analyzer must agree with unrolled ground truth."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch import hlo
+
+
+def _flops(fn, *args):
+    compiled = jax.jit(fn).lower(*args).compile()
+    return hlo.analyze(compiled.as_text()), compiled
+
+
+def test_scan_matches_unrolled_flops():
+    L, B, D = 8, 64, 256
+    w = jax.ShapeDtypeStruct((L, D, D), jnp.bfloat16)
+    x = jax.ShapeDtypeStruct((B, D), jnp.bfloat16)
+
+    def scanned(w, x):
+        def body(h, wl):
+            return (
+                jnp.dot(h, wl, preferred_element_type=jnp.float32).astype(
+                    h.dtype
+                ),
+                None,
+            )
+        h, _ = jax.lax.scan(body, x, w)
+        return h.sum()
+
+    def unrolled(w, x):
+        h = x
+        for i in range(L):
+            h = jnp.dot(h, w[i], preferred_element_type=jnp.float32).astype(
+                h.dtype
+            )
+        return h.sum()
+
+    cs, _ = _flops(scanned, w, x)
+    cu, _ = _flops(unrolled, w, x)
+    expected = 2 * L * B * D * D
+    assert cs.flops == pytest.approx(expected, rel=0.15), cs.flops
+    assert cu.flops == pytest.approx(expected, rel=0.15), cu.flops
+    # the scanned version must NOT undercount by ~L (cost_analysis does)
+    assert cs.flops > 0.5 * cu.flops
+
+
+def test_dot_flops_exact():
+    a = jax.ShapeDtypeStruct((128, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    c, _ = _flops(lambda a, b: a @ b, a, b)
+    assert c.flops == pytest.approx(2 * 128 * 64 * 32, rel=0.05)
+
+
+def test_collective_bytes_with_scan(monkeypatch):
+    # needs >1 device: run in subprocess with forced host devices
+    import subprocess, sys, textwrap
+
+    code = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.launch import hlo
+
+        mesh = Mesh(np.array(jax.devices()).reshape(4), ("d",))
+        L, B, D = 5, 32, 128
+        sd = NamedSharding(mesh, P("d", None))
+        sw = NamedSharding(mesh, P())
+
+        def f(w, x):
+            def body(h, wl):
+                h = jnp.dot(h, wl, preferred_element_type=jnp.float32)
+                h = jax.lax.with_sharding_constraint(h.astype(jnp.bfloat16), sd)
+                return h, None
+            h, _ = jax.lax.scan(body, x, w)
+            return jax.lax.with_sharding_constraint(h, sw).sum()
+
+        ws = jax.ShapeDtypeStruct((L, D, D), jnp.bfloat16, sharding=NamedSharding(mesh, P(None, "d", None)))
+        xs = jax.ShapeDtypeStruct((B, D), jnp.bfloat16, sharding=sd)
+        compiled = jax.jit(f).lower(ws, xs).compile()
+        cost = hlo.analyze(compiled.as_text())
+        # per-layer weight all-gather inside the loop must be multiplied by L
+        assert cost.collective_total > 0, compiled.as_text()[:2000]
+        print("COLLECTIVE_OK", cost.collective_total, cost.flops)
+        """
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env={**__import__("os").environ, "PYTHONPATH": "src"},
+        cwd="/root/repo",
+        timeout=300,
+    )
+    assert "COLLECTIVE_OK" in out.stdout, out.stdout + out.stderr

@@ -1,0 +1,90 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret mode on CPU) vs the
+pure-jnp oracle in ref.py."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+SHAPES_PW = [
+    (1, 1, 1),
+    (8, 8, 2),
+    (128, 128, 2),
+    (129, 127, 3),
+    (64, 256, 4),
+    (200, 50, 64),
+    (33, 65, 128),
+    (17, 300, 200),
+]
+
+
+@pytest.mark.parametrize("m,n,d", SHAPES_PW)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_sq_l2(m, n, d, dtype):
+    rng = np.random.default_rng(m * 1000 + n + d)
+    q = jnp.asarray(rng.standard_normal((m, d)), dtype)
+    p = jnp.asarray(rng.standard_normal((n, d)), dtype)
+    got = ops.pairwise_sq_l2(q, p)
+    want = ref.pairwise_sq_l2(q, p)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+    assert got.dtype == jnp.float32
+    assert (np.asarray(got) >= 0).all()
+
+
+@pytest.mark.parametrize("m,n,d", [(64, 64, 8), (100, 30, 17)])
+@pytest.mark.parametrize("bm,bn,bk", [(8, 128, 128), (128, 256, 256)])
+def test_pairwise_block_sweep(m, n, d, bm, bn, bk):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+    p = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    got = ops.pairwise_sq_l2(q, p, bm=bm, bn=bn, bk=bk)
+    want = ref.pairwise_sq_l2(q, p)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+SHAPES_CM = [(1, 1), (10, 2), (8, 128), (100, 3), (517, 130), (1024, 64)]
+
+
+@pytest.mark.parametrize("n,d", SHAPES_CM)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cov_matvec(n, d, dtype):
+    rng = np.random.default_rng(n + d)
+    x = jnp.asarray(rng.standard_normal((n, d)), dtype)
+    mean = jnp.mean(x.astype(jnp.float32), axis=0).astype(dtype)
+    w = jnp.asarray(rng.standard_normal(d), dtype)
+    got = ops.cov_matvec(x, mean, w)
+    want = ref.cov_matvec(x, mean, w)
+    tol = 1e-3 if dtype == jnp.float32 else 1e-1
+    np.testing.assert_allclose(
+        got, want, rtol=tol, atol=tol * max(1.0, float(jnp.abs(want).max()))
+    )
+
+
+def test_lower_bounds_matches_search_quantity():
+    """ops.lower_bounds == the D_N pruning quantity of §4.2."""
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.standard_normal((10, 3)), jnp.float32)
+    c = jnp.asarray(rng.standard_normal((20, 3)), jnp.float32)
+    r = jnp.asarray(rng.uniform(0.1, 1.0, 20), jnp.float32)
+    got = ops.lower_bounds(q, c, r)
+    want = np.maximum(
+        np.sqrt(((np.asarray(q)[:, None] - np.asarray(c)[None]) ** 2).sum(-1))
+        - np.asarray(r)[None],
+        0.0,
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_power_iteration_matches_eigh():
+    from repro.core.pca import first_component_exact
+
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(
+        rng.standard_normal((400, 6)) @ np.diag([5, 2, 1, 0.5, 0.2, 0.1]),
+        jnp.float32,
+    )
+    w = ops.power_iteration(x, iters=40)
+    we = first_component_exact(np.asarray(x))
+    assert abs(float(np.dot(np.asarray(w), we))) > 0.999

@@ -1,0 +1,86 @@
+"""Every search implementation == brute force, on every tree family and
+data distribution (host searches here; batched jit in test_search_jax)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import TreeSpec, brute, build
+from repro.core import search_host as sh
+from repro.data.synthetic import ALL_DATASETS, make, uniform_queries
+
+SPECS = {
+    "ballstar": TreeSpec.ballstar(leaf_size=16),
+    "ball": TreeSpec.ball(leaf_size=16),
+    "kd": TreeSpec.kd(leaf_size=16),
+}
+
+
+@pytest.mark.parametrize("name", list(SPECS))
+def test_knn_matches_brute(name):
+    rng = np.random.default_rng(1)
+    pts = rng.standard_normal((1200, 3))
+    tree = build(pts, SPECS[name])
+    for q in rng.standard_normal((20, 3)):
+        st_ = sh.knn_search(tree, q, 7)
+        bi, bd = brute.knn(pts, q, 7)
+        np.testing.assert_allclose(np.sort(st_.distances), bd, rtol=1e-9)
+        assert set(st_.indices) == set(bi) or np.allclose(
+            np.sort(st_.distances), bd
+        )
+
+
+@pytest.mark.parametrize("name", list(SPECS))
+def test_range_matches_brute(name):
+    rng = np.random.default_rng(2)
+    pts = rng.standard_normal((800, 2))
+    tree = build(pts, SPECS[name])
+    for q in rng.standard_normal((10, 2)):
+        st_ = sh.range_search(tree, q, 0.6)
+        bi, _ = brute.range_query(pts, q, 0.6)
+        assert set(st_.indices.tolist()) == set(bi.tolist())
+
+
+@pytest.mark.parametrize("dataset", sorted(ALL_DATASETS))
+def test_constrained_on_paper_distributions(dataset):
+    pts = make(dataset, 1500, seed=4)
+    tree = build(pts, TreeSpec.ballstar(leaf_size=16))
+    queries = uniform_queries(pts, 10, seed=5)
+    scale = np.linalg.norm(pts.std(axis=0))
+    for q in queries:
+        st_ = sh.constrained_knn(tree, q, 5, 0.3 * scale)
+        bi, bd = brute.constrained_knn(pts, q, 5, 0.3 * scale)
+        np.testing.assert_allclose(
+            st_.distances, bd, rtol=1e-9, atol=1e-12
+        )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(20, 400),
+    k=st.integers(1, 12),
+    seed=st.integers(0, 9999),
+    r_scale=st.floats(0.05, 3.0),
+)
+def test_constrained_property(n, k, seed, r_scale):
+    rng = np.random.default_rng(seed)
+    pts = rng.standard_normal((n, 2))
+    q = rng.standard_normal(2)
+    r = r_scale
+    tree = build(pts, TreeSpec.ballstar(leaf_size=8))
+    st_ = sh.constrained_knn(tree, q, k, r)
+    bi, bd = brute.constrained_knn(pts, q, k, r)
+    np.testing.assert_allclose(st_.distances, bd, rtol=1e-9, atol=1e-12)
+    assert (st_.distances <= r + 1e-12).all()
+
+
+def test_visit_accounting_monotonic():
+    """Larger range / larger k can only visit more nodes."""
+    rng = np.random.default_rng(7)
+    pts = rng.standard_normal((2000, 2))
+    tree = build(pts, TreeSpec.ballstar())
+    q = rng.standard_normal(2)
+    v = [
+        sh.constrained_knn(tree, q, 5, r).nodes_visited
+        for r in (0.1, 0.5, 2.0, np.inf)
+    ]
+    assert v == sorted(v)

@@ -1,0 +1,70 @@
+"""Batched jit search == brute force == host reference (incl. exact
+node-visit parity with the host traversal)."""
+import numpy as np
+import pytest
+
+from repro.core import TreeSpec, brute, build
+from repro.core import search_host as sh
+from repro.core import search_jax as sj
+
+
+@pytest.fixture(scope="module", params=["host", "jax"])
+def tree_and_points(request):
+    rng = np.random.default_rng(11)
+    pts = rng.standard_normal((2500, 3))
+    tree = build(pts, TreeSpec.ballstar(leaf_size=16), backend=request.param)
+    return tree, pts
+
+
+def test_batched_constrained_matches_brute(tree_and_points):
+    tree, pts = tree_and_points
+    rng = np.random.default_rng(12)
+    queries = rng.standard_normal((40, 3))
+    k, r = 9, 1.0
+    res = sj.search(tree, queries, k=k, r=r)
+    for i in range(queries.shape[0]):
+        bi, bd = brute.constrained_knn(pts, queries[i], k, r)
+        got = np.asarray(res.indices[i])
+        got = got[got >= 0]
+        assert np.array_equal(np.sort(got), np.sort(bi))
+        np.testing.assert_allclose(
+            np.asarray(res.distances[i])[: len(bd)], bd, rtol=1e-4, atol=1e-5
+        )
+
+
+def test_visit_parity_with_host(tree_and_points):
+    """The vmapped while_loop performs the same traversal as the host
+    recursion: node-visit counts must match exactly."""
+    tree, pts = tree_and_points
+    rng = np.random.default_rng(13)
+    queries = rng.standard_normal((12, 3))
+    k, r = 5, 0.8
+    res = sj.search(tree, queries, k=k, r=r)
+    for i in range(queries.shape[0]):
+        host = sh.constrained_knn(tree, queries[i], k, r)
+        assert int(res.nodes_visited[i]) == host.nodes_visited
+
+
+def test_knn_unbounded(tree_and_points):
+    tree, pts = tree_and_points
+    rng = np.random.default_rng(14)
+    queries = rng.standard_normal((10, 3))
+    res = sj.search(tree, queries, k=4, r=np.inf)
+    for i in range(queries.shape[0]):
+        bi, bd = brute.knn(pts, queries[i], 4)
+        np.testing.assert_allclose(
+            np.asarray(res.distances[i]), bd, rtol=1e-4, atol=1e-5
+        )
+
+
+def test_per_query_radius(tree_and_points):
+    tree, pts = tree_and_points
+    rng = np.random.default_rng(15)
+    queries = rng.standard_normal((8, 3))
+    radii = rng.uniform(0.3, 2.0, size=8)
+    res = sj.search(tree, queries, k=6, r=radii)
+    for i in range(8):
+        bi, bd = brute.constrained_knn(pts, queries[i], 6, radii[i])
+        got = np.asarray(res.indices[i])
+        got = got[got >= 0]
+        assert np.array_equal(np.sort(got), np.sort(bi))

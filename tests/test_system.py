@@ -1,0 +1,45 @@
+"""End-to-end behaviour tests: the full pipeline a user of the library
+runs — generate data, build the index (vectorized JAX builder), run
+batched constrained-NN, cross-check against brute force."""
+import numpy as np
+
+from repro.core import TreeSpec, brute, build
+from repro.core import search_jax as sj
+from repro.data.synthetic import make, uniform_queries
+
+
+def test_end_to_end_pipeline():
+    pts = make("lithuanian", 5000, seed=0)
+    tree = build(pts, TreeSpec.ballstar(leaf_size=32), backend="jax")
+    queries = uniform_queries(pts, 64, seed=1)
+    scale = float(np.linalg.norm(pts.std(axis=0)))
+    k, r = 10, 0.4 * scale
+
+    res = sj.search(tree, queries, k=k, r=r)
+    assert res.indices.shape == (64, k)
+    assert not np.isnan(np.asarray(res.distances[res.indices >= 0])).any()
+
+    # spot-check half the queries against brute force
+    for i in range(0, 64, 2):
+        bi, bd = brute.constrained_knn(pts, queries[i], k, r)
+        got = np.asarray(res.indices[i])
+        got = got[got >= 0]
+        assert np.array_equal(np.sort(got), np.sort(bi))
+
+    # the index prunes: far fewer nodes visited than exist
+    assert int(np.asarray(res.nodes_visited).mean()) < tree.n_nodes // 4
+
+
+def test_backend_parity():
+    """host-built and jax-built ball*-trees answer queries identically."""
+    pts = make("sobol", 2000, seed=2)
+    queries = uniform_queries(pts, 16, seed=3)
+    k, r = 5, 0.2
+    out = {}
+    for backend in ("host", "jax"):
+        tree = build(pts, TreeSpec.ballstar(leaf_size=16), backend=backend)
+        res = sj.search(tree, queries, k=k, r=r)
+        d = np.asarray(res.distances).copy()
+        d[np.isinf(d)] = -1.0
+        out[backend] = d
+    np.testing.assert_allclose(out["host"], out["jax"], rtol=1e-4, atol=1e-5)

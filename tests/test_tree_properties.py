@@ -1,0 +1,119 @@
+"""Structural invariants of every builder (host + jax), incl. hypothesis
+property tests on randomized datasets."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Tree, TreeSpec, build
+
+SPECS = {
+    "ballstar": TreeSpec.ballstar(leaf_size=16),
+    "ball": TreeSpec.ball(leaf_size=16),
+    "kd": TreeSpec.kd(leaf_size=16),
+}
+
+
+def check_invariants(tree: Tree, points: np.ndarray, tol=1e-4):
+    n = points.shape[0]
+    # root covers everything
+    assert tree.count[0] == n
+    # permutation is a permutation
+    assert sorted(tree.perm.tolist()) == list(range(n))
+    assert np.allclose(tree.points, points[tree.perm])
+    leaf = np.asarray(tree.child_l) < 0
+    # leaves partition the point set
+    assert tree.count[leaf].sum() == n
+    for node in range(tree.n_nodes):
+        lo, c = int(tree.start[node]), int(tree.count[node])
+        assert c >= 1
+        pts = tree.points[lo : lo + c]
+        # ball containment: every member within radius of center
+        d = np.sqrt(((pts - tree.center[node]) ** 2).sum(1))
+        assert d.max() <= tree.radius[node] + tol
+        l, r = int(tree.child_l[node]), int(tree.child_r[node])
+        if l >= 0:
+            # children tile the parent slice exactly
+            assert int(tree.start[l]) == lo
+            assert int(tree.start[r]) == lo + int(tree.count[l])
+            assert int(tree.count[l]) + int(tree.count[r]) == c
+            assert int(tree.count[l]) >= 1 and int(tree.count[r]) >= 1
+    # leaf buckets match slices
+    for node in np.where(leaf)[0]:
+        rank = int(tree.leaf_of_node[node])
+        assert rank >= 0
+        c = int(tree.count[node])
+        li = tree.leaf_index[rank]
+        assert (li[:c] >= 0).all() and (li[c:] == -1).all()
+        np.testing.assert_allclose(
+            tree.leaf_points[rank, :c],
+            points[li[:c]],
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+
+@pytest.mark.parametrize("backend", ["host", "jax"])
+@pytest.mark.parametrize("name", list(SPECS))
+def test_invariants(name, backend):
+    rng = np.random.default_rng(3)
+    pts = rng.standard_normal((700, 3))
+    tree = build(pts, SPECS[name], backend=backend)
+    check_invariants(tree, pts)
+
+
+@pytest.mark.parametrize("backend", ["host", "jax"])
+def test_duplicate_points(backend):
+    # degenerate nodes (all points identical) must become leaves
+    pts = np.concatenate(
+        [np.zeros((100, 2)), np.random.default_rng(0).standard_normal((100, 2))]
+    )
+    tree = build(pts, TreeSpec.ballstar(leaf_size=8), backend=backend)
+    check_invariants(tree, pts)
+
+
+@pytest.mark.parametrize("backend", ["host", "jax"])
+def test_tiny_inputs(backend):
+    for n in (1, 2, 3, 5):
+        pts = np.random.default_rng(n).standard_normal((n, 2))
+        tree = build(pts, TreeSpec.ballstar(leaf_size=2), backend=backend)
+        check_invariants(tree, pts)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(5, 300),
+    d=st.integers(1, 6),
+    seed=st.integers(0, 10_000),
+    name=st.sampled_from(list(SPECS)),
+)
+def test_invariants_property(n, d, seed, name):
+    rng = np.random.default_rng(seed)
+    # mix of continuous + quantized coords to generate duplicates
+    pts = rng.standard_normal((n, d))
+    if seed % 3 == 0:
+        pts = np.round(pts * 2) / 2
+    tree = build(pts, SPECS[name], backend="host")
+    check_invariants(tree, pts)
+
+
+def test_ballstar_balance_beats_ball():
+    """The paper's headline structural claim (§3.2, Fig 5): PCA splits
+    give more balanced (shallower) trees than two-farthest-point splits."""
+    rng = np.random.default_rng(0)
+    # skewed data with outliers — the regime the paper targets
+    pts = np.concatenate(
+        [
+            rng.standard_normal((4000, 2)) @ np.array([[3.0, 0.0], [0.0, 0.3]]),
+            rng.standard_normal((50, 2)) * 0.2 + np.array([40.0, 0.0]),
+        ]
+    )
+    t_star = build(pts, TreeSpec.ballstar(leaf_size=16))
+    t_ball = build(pts, TreeSpec.ball(leaf_size=16))
+    assert t_star.average_depth() <= t_ball.average_depth()
+
+
+def test_paper_f2_variant_runs():
+    pts = np.random.default_rng(0).standard_normal((300, 2))
+    spec = TreeSpec(splitter="ballstar", threshold="fscan", f2="paper")
+    tree = build(pts, spec)
+    check_invariants(tree, pts)
