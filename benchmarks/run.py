@@ -17,7 +17,7 @@ def main() -> None:
         "--only",
         default=None,
         help="comma list: depth,nodes_visited,constrained_nn,search_time,"
-        "scalability,kernels,roofline",
+        "scalability,kernels,roofline,streaming",
     )
     args = ap.parse_args()
 
@@ -29,6 +29,7 @@ def main() -> None:
         roofline_report,
         scalability,
         search_time,
+        streaming,
     )
 
     sections = {
@@ -39,6 +40,7 @@ def main() -> None:
         "scalability": scalability.run,          # Fig 7b
         "kernels": kernels_bench.run,            # kernel rooflines
         "roofline": roofline_report.run,         # dry-run roofline table
+        "streaming": streaming.run,              # LSM mixed read/write
     }
     chosen = args.only.split(",") if args.only else list(sections)
     print("name,us_per_call,derived")

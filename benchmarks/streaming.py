@@ -1,0 +1,129 @@
+"""Streaming mutable-index benchmark: sustained insert throughput and
+query latency under a mixed read/write workload.
+
+Workload: bulk-load a prefix of the dataset, then stream the rest in
+batches; after every insert batch run a constrained-KNN query batch,
+and periodically delete a random slice of live points. Insert cost
+includes every seal and tier merge triggered along the way (that is
+the "sustained" in sustained inserts/sec), query cost is measured on
+the live LSM shape (segments ∪ delta). A final section compares the
+streamed index's query latency and results against a fresh static
+ball*-tree over the same live point set — the exactness referent.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import TreeSpec, build
+from repro.core import search_jax as sj
+from repro.index import StreamingConfig, StreamingIndex
+
+from .common import dataset, emit, queries_for, radius_for, sizes
+
+
+def run(full: bool = False) -> None:
+    n, n_q = sizes(full)
+    n_prefill = n // 2
+    batch = 2_000 if full else 500
+    q_batch = 64
+    k = 10
+    rng = np.random.default_rng(0)
+
+    pts = dataset("highleyman", n)
+    queries = queries_for(pts, n_q)
+    r = radius_for(pts)
+
+    idx = StreamingIndex(
+        StreamingConfig(
+            dim=pts.shape[1],
+            delta_capacity=4_096 if full else 1_024,
+            spec=TreeSpec.ballstar(leaf_size=32),
+            merge_factor=4,
+        )
+    )
+    idx.bulk_load(pts[:n_prefill])
+
+    # warm up the jit caches so compile time is not billed to the stream
+    idx.constrained_knn(queries[:q_batch], k, r)
+
+    t_insert = t_query = 0.0
+    n_inserted = n_queried = n_deleted = 0
+    qi = 0
+    for lo in range(n_prefill, n, batch):
+        chunk = pts[lo : lo + batch]
+        t0 = time.perf_counter()
+        gids = idx.add(chunk)
+        t_insert += time.perf_counter() - t0
+        n_inserted += len(chunk)
+
+        qs = queries[qi % max(1, n_q - q_batch) : qi % max(1, n_q - q_batch) + q_batch]
+        qi += q_batch
+        t0 = time.perf_counter()
+        res = idx.constrained_knn(qs, k, r)  # returns host arrays (synced)
+        t_query += time.perf_counter() - t0
+        n_queried += len(qs)
+
+        if (lo - n_prefill) // batch % 4 == 3:  # mixed workload: deletes
+            # sample across the WHOLE live set (not just the newest batch)
+            # so segment-resident tombstoning and purge are exercised too
+            live = idx.live_gids()
+            victims = rng.choice(live, size=len(gids) // 10, replace=False)
+            n_deleted += idx.delete(victims)
+
+    st = idx.stats()
+    emit(
+        "streaming_insert",
+        1e6 * t_insert / max(n_inserted, 1),
+        f"{n_inserted / max(t_insert, 1e-9):.0f}_inserts_per_sec",
+    )
+    emit(
+        "streaming_query",
+        1e6 * t_query / max(n_queried, 1),
+        f"k={k}_segments={st['n_segments']}_delta={st['delta_fill']}",
+    )
+    emit(
+        "streaming_deletes",
+        0.0,
+        f"deleted={n_deleted}_dead_in_segments={st['n_dead_in_segments']}",
+    )
+
+    # --- exactness + latency referent: fresh static build over live set ----
+    live_pts, live_gids = idx.live_points()
+    static_tree = build(live_pts, TreeSpec.ballstar(leaf_size=32), backend="jax")
+    qs = queries[:q_batch]
+    # device-resident tree + warm jit, mirroring the streaming side: the
+    # timed region is the query alone, not the host->device upload
+    dt = sj.device_tree(static_tree)
+    stack = sj.max_depth(static_tree) + 3
+    qs_dev = np.asarray(qs, np.float32)
+    sres = sj.constrained_knn(dt, qs_dev, r, k, stack)
+    np.asarray(sres.distances)
+    t0 = time.perf_counter()
+    sres = sj.constrained_knn(dt, qs_dev, r, k, stack)
+    np.asarray(sres.distances)
+    t_static = time.perf_counter() - t0
+    lres = idx.constrained_knn(qs, k, r)
+    d_static = np.asarray(sres.distances)
+    match = np.allclose(
+        np.where(np.isinf(d_static), -1, d_static),
+        np.where(np.isinf(lres.distances), -1, lres.distances),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+    # ids must agree too (distances alone would miss a gid-mapping bug):
+    # static indices are local ids into the live set, gid = live_gids[id]
+    i_static = np.asarray(sres.indices)
+    for row_s, row_l in zip(i_static, lres.gids):
+        s_ids = {int(live_gids[j]) for j in row_s[row_s >= 0]}
+        match = match and s_ids == set(row_l[row_l >= 0].tolist())
+    emit(
+        "streaming_vs_static",
+        1e6 * t_static / len(qs),
+        f"static_us_per_query_exact_match={match}",
+    )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,12 +1,18 @@
 """Retrieval-augmented serving: the paper's range-constrained KNN as the
-datastore lookup of a kNN-LM.
+datastore lookup of a kNN-LM — with ONLINE memory.
 
 A small LM is trained briefly, a datastore of (hidden state -> next
-token) pairs is built from held-out text into a ball*-tree, and decoding
-interpolates the LM distribution with constrained-NN retrieval. The
-range constraint r is what the paper's Algorithm 2 contributes: it both
-prunes the search tree (fewer nodes visited) and keeps only genuinely
-close neighbors in the mixture.
+token) pairs is bulk-loaded from held-out text into the streaming
+LSM ball*-tree index, and decoding interpolates the LM distribution
+with constrained-NN retrieval. The range constraint r is what the
+paper's Algorithm 2 contributes: it both prunes the search tree (fewer
+nodes visited) and keeps only genuinely close neighbors in the mixture.
+
+New in the streaming index: the memory is *mutable*. Every decode step
+appends its own (state, predicted-token) pairs back into the datastore
+(`store.add`), so the model remembers what it just generated, and old
+entries can be evicted (`store.delete`) to run with bounded memory —
+all while lookups stay exact over the live key set.
 
     PYTHONPATH=src python examples/knnlm_serve.py
 """
@@ -48,11 +54,12 @@ def main():
     keys = np.concatenate(keys)
     vals = np.concatenate([v[: len(k)] for v, k in zip(vals, keys[None])])
     vals = np.resize(np.concatenate([np.asarray(v).ravel() for v in [vals]]), len(keys))
-    store = Datastore.from_pairs(keys, vals, leaf_size=64)
-    print(f"datastore: {len(keys)} states, tree depth "
-          f"{store.tree.average_depth():.1f}")
+    store = Datastore.from_pairs(keys, vals, leaf_size=64, delta_capacity=256)
+    seed_tree = store.index.segments[0].tree  # bulk-loaded static segment
+    print(f"datastore: {store.n_keys} states, seed-segment depth "
+          f"{seed_tree.average_depth():.1f}")
 
-    # --- decode with interpolation --------------------------------------- #
+    # --- decode with interpolation + online memory growth ----------------- #
     engine = Engine(cfg, values, cache_len=48)
     prompt = jnp.asarray(
         data_lib.batch_at(data_cfg, 99)["inputs"][:2, :32]
@@ -63,6 +70,7 @@ def main():
     ) / np.sqrt(cfg.vocab)
     r = 0.6 * float(np.linalg.norm(keys.std(0)))
     nodes_constrained = nodes_filter = 0
+    added_gids = []
     for step_states in hidden:
         q = step_states @ proj
         nv, nd, ok = store.lookup(q, k=8, r=r)
@@ -70,15 +78,26 @@ def main():
         lm /= lm.sum(-1, keepdims=True)
         mixed = knn_interpolate(lm, nv, nd, ok, lam=0.3)
         assert np.allclose(mixed.sum(-1), 1.0, atol=1e-5)
+        # online memory: remember this step's own (state, token) pairs —
+        # the next step's lookup already sees them (delta-buffer search)
+        added_gids.append(store.add(q, mixed.argmax(-1)))
         # instrumentation: constrained vs knn-then-filter on this workload
         for qq in q:
             nodes_constrained += sh.constrained_knn(
-                store.tree, qq, 8, r
+                seed_tree, qq, 8, r
             ).nodes_visited
             nodes_filter += sh.knn_then_filter(
-                store.tree, qq, 8, r
+                seed_tree, qq, 8, r
             ).nodes_visited
-    print(f"decoded {toks.shape}; retrieval visited "
+    grown = store.n_keys
+    print(f"decoded {toks.shape}; memory grew {len(keys)} -> {grown} states "
+          f"(index {store.index.stats()['n_segments']} segments + delta)")
+
+    # --- bounded memory: evict what we just added -------------------------- #
+    store.delete(np.concatenate(added_gids))
+    print(f"evicted decode-time memory: {grown} -> {store.n_keys} states; "
+          f"lookups stay exact over the live set")
+    print(f"retrieval visited "
           f"{nodes_constrained} nodes (constrained) vs "
           f"{nodes_filter} (knn+filter) -> "
           f"{100 * (1 - nodes_constrained / max(nodes_filter, 1)):.0f}% saved")

@@ -25,6 +25,21 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.5 exposes shard_map at the top level
+    _shard_map = jax.shard_map
+except AttributeError:  # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# the replication-check kwarg was renamed check_rep -> check_vma
+# independently of the move, so detect it from the signature
+import inspect as _inspect
+
+_SHARD_MAP_KW = (
+    {"check_vma": False}
+    if "check_vma" in _inspect.signature(_shard_map).parameters
+    else {"check_rep": False}
+)
+
 from . import build_jax, search_jax as sj
 from .types import Tree, TreeSpec
 
@@ -126,11 +141,11 @@ def constrained_knn(
     )
 
     @partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(tree_specs, P(), P(axis)),
         out_specs=(P(), P()),
-        check_vma=False,
+        **_SHARD_MAP_KW,
     )
     def search(dt, qs, off):
         # shard-local tree: drop the leading (length-1) shard dim

@@ -1,0 +1,42 @@
+"""Streaming mutable constrained-NN index: LSM-tiered ball*-tree segments
+with a device-resident delta buffer.
+
+The paper's index is build-once; emerging location-based workloads are
+not — points arrive and expire under traffic. This subsystem makes the
+ball*-tree mutable without giving up exactness, using the log-structured
+merge decomposition:
+
+    writes ──> delta arena (device, fixed capacity, exhaustive Pallas
+               pairwise search)
+        seal ──> immutable ball*-tree segment (level-synchronous
+                 `build_jax` build)
+            merge ──> geometric size-tiered compaction (rebuild, purge
+                      tombstones)
+
+    deletes ──> tombstones: leaf-slot masks in the owning segment's
+                device `leaf_index` (the traversal already skips
+                negative slots), purged physically at compaction
+
+    reads ──> versioned `Snapshot` (functional arrays = free MVCC);
+              exact top-k merge over segments ∪ delta, the same merge
+              idiom as `core/distributed.py`
+
+Exactness argument: each live point lives in exactly one part; each
+part's constrained-KNN is exact over its own live points (tombstone
+masks only remove candidates, and node radii stay conservative upper
+bounds, so tree pruning is still sound); the union of per-part k-bests
+contains the global k-best; the final top-k merge is exact. Hence
+search over the streaming index equals search over a fresh static
+ball*-tree built on the current live point set — property-tested
+against the brute oracle in `tests/test_streaming_index.py`.
+
+Amortization: with delta capacity C and merge factor f, a point is
+rebuilt O(log_f (N/C)) times over its lifetime, and at most
+O(f · log_f (N/C)) segments (plus the delta) are searched per query.
+"""
+from .delta import DeltaBuffer  # noqa: F401
+from .search import StreamResult, constrained_knn, knn  # noqa: F401
+from .segment import Segment, merge_segments, plan_merges, tier_of  # noqa: F401
+from .snapshot import SegmentView, Snapshot  # noqa: F401
+from .streaming import StreamingConfig, StreamingIndex  # noqa: F401
+from .tombstones import TombstoneLog  # noqa: F401

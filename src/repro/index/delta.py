@@ -1,0 +1,114 @@
+"""Device-resident delta buffer: the mutable tier-0 of the streaming index.
+
+A fixed-capacity (capacity, d) array lives on device; `append` writes new
+points into the next free slots and `tombstone` marks slots dead by
+setting their global id to -1. Because the buffer is small (one leaf-ish
+sized arena, typically 1k-8k points) it is searched *exhaustively* with
+the Pallas blocked pairwise-L2 kernel — the same MXU-friendly
+``q² + p² - 2qp`` form used by every other hot path — so delta search is
+one matmul-shaped kernel launch, not a traversal. Dead and never-filled
+slots simply read +inf distance, which keeps the search branch-free and
+the buffer shape static (one compiled program per capacity).
+
+All updates are functional (`jax.Array.at[...]`), so a `Snapshot` taken
+before a mutation keeps seeing its own consistent arrays for free.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaBuffer:
+    points: jax.Array  # (capacity, d) f32
+    gids: jax.Array    # (capacity,) i32 global id; -1 = empty or dead
+    size: int          # append cursor (slots ever used)
+    n_dead: int = 0    # tombstoned slots among the first `size`
+
+    @staticmethod
+    def empty(capacity: int, dim: int) -> "DeltaBuffer":
+        return DeltaBuffer(
+            points=jnp.zeros((capacity, dim), jnp.float32),
+            gids=jnp.full((capacity,), -1, jnp.int32),
+            size=0,
+        )
+
+    @property
+    def capacity(self) -> int:
+        return int(self.points.shape[0])
+
+    @property
+    def dim(self) -> int:
+        return int(self.points.shape[1])
+
+    @property
+    def free(self) -> int:
+        return self.capacity - self.size
+
+    @property
+    def n_live(self) -> int:
+        return self.size - self.n_dead
+
+    def append(self, pts: np.ndarray, gids: np.ndarray) -> "DeltaBuffer":
+        """Write `pts` into the next free slots. Caller checks `free`."""
+        m = int(pts.shape[0])
+        if m > self.free:  # raise, not assert: must survive python -O
+            raise ValueError(f"delta overflow: {m} points, {self.free} free")
+        slots = np.arange(self.size, self.size + m)
+        return dataclasses.replace(  # replace: n_dead must carry over
+            self,
+            points=self.points.at[slots].set(jnp.asarray(pts, jnp.float32)),
+            gids=self.gids.at[slots].set(
+                jnp.asarray(np.asarray(gids), jnp.int32)
+            ),
+            size=self.size + m,
+        )
+
+    def tombstone(self, slots: np.ndarray) -> "DeltaBuffer":
+        """Mark slots dead (their points stop matching any query). The
+        locator pops each gid exactly once, so every slot here was live."""
+        slots = np.asarray(slots)
+        return dataclasses.replace(
+            self,
+            gids=self.gids.at[slots].set(-1),
+            n_dead=self.n_dead + len(slots),
+        )
+
+    def live(self):
+        """Host copy of live (points, gids) in insertion order."""
+        g = np.asarray(self.gids[: self.size])
+        p = np.asarray(self.points[: self.size])
+        m = g >= 0
+        return p[m], g[m].astype(np.int64)
+
+
+def search(points: jax.Array, gids: jax.Array, queries: jax.Array, k: int, r):
+    """Exact constrained-KNN over the delta arena via the pairwise kernel.
+
+    Returns (distances (Q, k), gids (Q, k)) with +inf / -1 where fewer
+    than k live points fall within radius r of the query.
+    """
+    q = jnp.asarray(queries, jnp.float32)
+    rb = jnp.broadcast_to(jnp.asarray(r, jnp.float32), q.shape[:1])
+    d = ops.pairwise_l2(q, points)  # (Q, capacity)
+    ok = (gids >= 0)[None, :] & (d <= rb[:, None])
+    d = jnp.where(ok, d, jnp.inf)
+    kk = min(k, int(points.shape[0]))
+    order = jnp.argsort(d, axis=1)[:, :kk]
+    dd = jnp.take_along_axis(d, order, axis=1)
+    gg = jnp.take_along_axis(
+        jnp.broadcast_to(gids[None, :], d.shape), order, axis=1
+    )
+    gg = jnp.where(jnp.isinf(dd), -1, gg)
+    if kk < k:  # arena smaller than k: pad to the caller's shape
+        pad = ((0, 0), (0, k - kk))
+        dd = jnp.pad(dd, pad, constant_values=jnp.inf)
+        gg = jnp.pad(gg, pad, constant_values=-1)
+    return dd, gg

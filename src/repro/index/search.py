@@ -1,0 +1,74 @@
+"""Unified exact search over a snapshot: segments ∪ delta, top-k merged.
+
+Each segment answers with the batched jit traversal (`search_jax`), the
+delta arena answers with one exhaustive pairwise-kernel pass, and the
+global answer is the top-k of the concatenated per-part top-k's — the
+same merge idiom as the distributed index (`core/distributed.py`), and
+exact for the same reason: every live point belongs to exactly one
+part, each part's k-best is exact over its own points, and the union of
+per-part k-bests is a superset of the global k-best.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import search_jax as sj
+
+from . import delta as delta_mod
+from .snapshot import Snapshot
+
+
+class StreamResult(NamedTuple):
+    gids: np.ndarray       # (Q, k) global point ids, -1 = no result
+    distances: np.ndarray  # (Q, k) inf where no result
+
+
+def constrained_knn(
+    snap: Snapshot, queries: np.ndarray, k: int, r
+) -> StreamResult:
+    """Exact constrained-KNN over the snapshot's live point set."""
+    q = jnp.asarray(np.asarray(queries, np.float32).reshape(-1, snap.dim))
+    nq = q.shape[0]
+    rb = jnp.broadcast_to(jnp.asarray(r, jnp.float32), (nq,))
+
+    parts_d, parts_g = [], []
+    for seg in snap.segments:
+        res = sj.constrained_knn(seg.dtree, q, rb, k, seg.stack_size)
+        n = seg.gids_dev.shape[0]
+        g = jnp.where(
+            res.indices >= 0,
+            seg.gids_dev[jnp.clip(res.indices, 0, n - 1)],
+            -1,
+        )
+        parts_d.append(res.distances)
+        parts_g.append(g)
+    if snap.delta_size:
+        dd, dg = delta_mod.search(snap.delta_points, snap.delta_gids, q, k, rb)
+        parts_d.append(dd)
+        parts_g.append(dg)
+
+    if not parts_d:  # empty index
+        return StreamResult(
+            gids=np.full((nq, k), -1, np.int64),
+            distances=np.full((nq, k), np.inf, np.float32),
+        )
+
+    cand_d = jnp.concatenate(parts_d, axis=1)
+    cand_g = jnp.concatenate(parts_g, axis=1)
+    if cand_d.shape[1] > k:
+        order = jnp.argsort(cand_d, axis=1)[:, :k]
+        cand_d = jnp.take_along_axis(cand_d, order, axis=1)
+        cand_g = jnp.take_along_axis(cand_g, order, axis=1)
+    return StreamResult(
+        gids=np.asarray(cand_g, np.int64),
+        distances=np.asarray(cand_d, np.float32),
+    )
+
+
+def knn(snap: Snapshot, queries: np.ndarray, k: int) -> StreamResult:
+    """Unconstrained KNN = constrained with r = inf (gates become no-ops)."""
+    return constrained_knn(snap, queries, k, np.inf)

@@ -1,0 +1,131 @@
+"""Immutable ball*-tree segments and the size-tiered merge policy.
+
+A segment is one sealed delta (or the product of a merge): a ball*-tree
+built once with the level-synchronous `build_jax` builder and never
+restructured. Mutability is layered on top:
+
+  * delete — a tombstone sets the point's slot in the device
+    ``leaf_index`` array to -1. The batched traversal already treats
+    negative leaf indices as padding, so a tombstoned point can never be
+    reported; the node centers/radii stay unchanged, which keeps every
+    pruning bound *conservative* (balls only over-cover), so search over
+    the remaining points stays exact.
+  * merge — when `merge_factor` segments accumulate in one size class,
+    their live points are collected and rebuilt into a single larger
+    segment. This is where tombstones are physically purged.
+
+Size classes are geometric in the delta capacity (class t holds segments
+with ~cap·factor^t live points), so a point participates in
+O(log_factor N) rebuilds over its lifetime — the classic size-tiered
+LSM amortization argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import build
+from repro.core import search_jax as sj
+from repro.core.types import Tree, TreeSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    tree: Tree                 # host tree (kept for rebuilds / inspection)
+    dtree: sj.DeviceTree       # device arrays; leaf_index carries tombstones
+    stack_size: int
+    gids: np.ndarray           # (n,) i64: local original id -> global id
+    gids_dev: jnp.ndarray      # (n,) i32 copy for on-device id mapping
+    slot_of_local: np.ndarray  # (n, 2) i32: local id -> (leaf rank, slot)
+    live: np.ndarray           # (n,) bool host mask (False = tombstoned)
+    n_dead: int = 0
+
+    @staticmethod
+    def from_points(
+        points: np.ndarray,
+        gids: np.ndarray,
+        spec: TreeSpec,
+        backend: str = "jax",
+    ) -> "Segment":
+        points = np.asarray(points, np.float32)
+        n = points.shape[0]
+        tree = build(points, spec, backend=backend)
+        li = np.asarray(tree.leaf_index)
+        slot_of_local = np.full((n, 2), -1, np.int32)
+        ranks, slots = np.nonzero(li >= 0)
+        slot_of_local[li[ranks, slots]] = np.stack([ranks, slots], 1)
+        return Segment(
+            tree=tree,
+            dtree=sj.device_tree(tree),
+            stack_size=sj.max_depth(tree) + 3,
+            gids=np.asarray(gids, np.int64),
+            gids_dev=jnp.asarray(np.asarray(gids), jnp.int32),
+            slot_of_local=slot_of_local,
+            live=np.ones(n, bool),
+        )
+
+    @property
+    def n_points(self) -> int:
+        return int(self.gids.shape[0])
+
+    @property
+    def n_live(self) -> int:
+        return self.n_points - self.n_dead
+
+    def tombstone(self, local_ids: np.ndarray) -> "Segment":
+        """Mask `local_ids` out of the device leaf buckets (functional)."""
+        local_ids = np.asarray(local_ids, np.int64)
+        rs = self.slot_of_local[local_ids]
+        leaf_index = self.dtree.leaf_index.at[rs[:, 0], rs[:, 1]].set(-1)
+        live = self.live.copy()
+        live[local_ids] = False
+        return dataclasses.replace(
+            self,
+            dtree=self.dtree._replace(leaf_index=leaf_index),
+            live=live,
+            n_dead=self.n_dead + len(local_ids),
+        )
+
+    def live_points(self):
+        """Live (points, gids) in the segment's original insertion order."""
+        inv = np.empty(self.n_points, np.int64)
+        inv[np.asarray(self.tree.perm)] = np.arange(self.n_points)
+        orig = np.asarray(self.tree.points)[inv]
+        return orig[self.live], self.gids[self.live]
+
+
+def tier_of(n_live: int, base: int, factor: int) -> int:
+    """Geometric size class: tier t covers [base·factor^t, base·factor^(t+1))."""
+    if n_live <= 0:
+        return 0
+    return max(0, int(math.floor(math.log(max(n_live, 1) / base, factor))))
+
+
+def plan_merges(
+    segments: Sequence[Segment], base: int, factor: int
+) -> List[List[int]]:
+    """Indices of segment groups due for compaction under size-tiering:
+    any tier holding >= factor segments merges all of them. One round;
+    the caller loops because a merge can cascade into the next tier."""
+    by_tier: Dict[int, List[int]] = {}
+    for i, s in enumerate(segments):
+        by_tier.setdefault(tier_of(s.n_live, base, factor), []).append(i)
+    return [ids for _, ids in sorted(by_tier.items()) if len(ids) >= factor]
+
+
+def merge_segments(
+    segments: Sequence[Segment], spec: TreeSpec, backend: str = "jax"
+) -> Segment | None:
+    """Rebuild the union of live points as one segment (purges tombstones).
+    Returns None when every point in the group is dead."""
+    parts = [s.live_points() for s in segments]
+    pts = np.concatenate([p for p, _ in parts])
+    gids = np.concatenate([g for _, g in parts])
+    if len(pts) == 0:
+        return None
+    return Segment.from_points(pts, gids, spec, backend=backend)

@@ -1,0 +1,50 @@
+"""Versioned read views: MVCC for free from functional device arrays.
+
+Every mutation of the streaming index (`add`, `delete`, seal, merge)
+bumps a version counter and replaces — never mutates — the device
+arrays it touches (`jax.Array.at[...]` updates and fresh segment
+builds). A `Snapshot` therefore only has to *reference* the current
+arrays: a reader holding a snapshot keeps searching the exact point set
+that existed at capture time, while the writer races ahead, at zero
+copy cost. This is the standard LSM manifest/superversion idea, except
+immutability is inherited from JAX instead of implemented with
+refcounts.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentView:
+    """The read-only slice of a segment that search needs on device."""
+
+    dtree: object         # search_jax.DeviceTree (leaf_index holds tombstones)
+    stack_size: int
+    gids_dev: jax.Array   # (n,) i32 local original id -> global id
+    n_live: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """A consistent, immutable view of (segments ∪ delta) at `version`."""
+
+    version: int
+    n_live: int
+    segments: Tuple[SegmentView, ...]
+    delta_points: jax.Array  # (capacity, d)
+    delta_gids: jax.Array    # (capacity,) i32, -1 = empty/dead
+    delta_size: int          # append cursor at capture time
+
+    @property
+    def n_parts(self) -> int:
+        """Independent search partitions (segments + non-empty delta)."""
+        return len(self.segments) + (1 if self.delta_size else 0)
+
+    @property
+    def dim(self) -> int:
+        return int(self.delta_points.shape[1])

@@ -1,0 +1,340 @@
+"""StreamingIndex: the mutable constrained-NN index (LSM over ball*-trees).
+
+Write path:
+  add     -> append into the device delta arena (O(1) per point); when
+             the arena fills it is *sealed*: its live points are built
+             into a fresh immutable ball*-tree segment with the
+             level-synchronous `build_jax` builder.
+  delete  -> tombstone by global id: a leaf-slot mask in the owning
+             segment (or a dead gid slot in the delta). Applied at
+             search time, physically purged by compaction.
+  merge   -> size-tiered policy: whenever `merge_factor` segments share
+             a geometric size class, they are rebuilt into one. A
+             half-dead segment is also rebuilt alone, so tombstone
+             garbage is bounded.
+
+Read path: `snapshot()` captures a versioned, immutable view; searches
+run against a snapshot so concurrent readers are never torn by writer
+progress (see `snapshot.py`). `constrained_knn`/`knn` on the index are
+conveniences that capture-and-search in one call.
+
+Concurrency: every public mutator computes its entire result — new
+delta arena, new segment table — on locals and publishes it with ONE
+reference assignment (`self._state = ...`, atomic in CPython). A reader
+calling `snapshot()` dereferences `self._state` once, so it sees either
+the state before a mutation or after it, never a half-applied seal,
+merge, or compaction.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.types import TreeSpec
+
+from . import search as search_mod
+from .delta import DeltaBuffer
+from .segment import Segment, merge_segments, plan_merges, tier_of
+from .snapshot import SegmentView, Snapshot
+from .tombstones import DELTA, TombstoneLog
+
+
+@dataclasses.dataclass
+class StreamingConfig:
+    dim: int
+    delta_capacity: int = 1024
+    spec: Optional[TreeSpec] = None   # default: TreeSpec.ballstar()
+    merge_factor: int = 4             # size-tiered fanout (>= 2)
+    backend: str = "jax"              # tree builder backend for seals/merges
+    purge_fraction: float = 0.5       # rebuild a segment once this dead
+
+    def __post_init__(self) -> None:
+        if self.spec is None:
+            self.spec = TreeSpec.ballstar()
+        # raise, not assert: must survive python -O
+        if self.merge_factor < 2:
+            raise ValueError("geometric tiering needs merge_factor >= 2")
+        if self.delta_capacity < 1:
+            raise ValueError("delta_capacity must be >= 1")
+
+
+@dataclasses.dataclass(frozen=True)
+class _State:
+    """Everything a reader needs, behind one atomically-swapped ref.
+    The segments dict is copy-on-write: never mutated after publish."""
+
+    version: int
+    delta: DeltaBuffer
+    segments: Dict[int, Segment]
+
+
+class StreamingIndex:
+    def __init__(self, config: StreamingConfig) -> None:
+        self.config = config
+        self.log = TombstoneLog()
+        self._next_uid = 0
+        self._state = _State(
+            version=0,
+            delta=DeltaBuffer.empty(config.delta_capacity, config.dim),
+            segments={},
+        )
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def version(self) -> int:
+        return self._state.version
+
+    @property
+    def n_live(self) -> int:
+        return self.log.n_live
+
+    @property
+    def delta(self) -> DeltaBuffer:
+        return self._state.delta
+
+    @property
+    def segments(self) -> List[Segment]:
+        return list(self._state.segments.values())
+
+    def live_gids(self) -> np.ndarray:
+        return np.sort(self.log.live_gids())
+
+    def live_points(self):
+        """Host copy of all live (points, gids), sorted by gid — the point
+        set a fresh static build would index (the exactness referent)."""
+        state = self._state
+        parts = [s.live_points() for s in state.segments.values()]
+        parts.append(state.delta.live())
+        pts = np.concatenate([p for p, _ in parts])
+        gids = np.concatenate([g for _, g in parts])
+        order = np.argsort(gids, kind="stable")
+        return pts[order], gids[order]
+
+    def stats(self) -> dict:
+        cfg = self.config
+        state = self._state
+        segs = list(state.segments.values())
+        return {
+            "version": state.version,
+            "n_live": self.n_live,
+            "n_deleted": self.log.n_deleted,
+            "n_segments": len(segs),
+            "n_dead_in_segments": sum(s.n_dead for s in segs),
+            "delta_fill": state.delta.size,
+            "delta_capacity": cfg.delta_capacity,
+            "tiers": sorted(
+                tier_of(s.n_live, cfg.delta_capacity, cfg.merge_factor)
+                for s in segs
+            ),
+        }
+
+    # -- write path ----------------------------------------------------------
+    # Every mutator updates self.log eagerly while building its new state
+    # on locals; if anything raises before _commit (e.g. a failed tree
+    # build during a seal or merge), _recover_log rederives the log from
+    # the still-published state so the two can never stay out of sync.
+
+    def add(self, points: np.ndarray) -> np.ndarray:
+        """Insert points; returns their assigned global ids."""
+        pts = np.asarray(points, np.float32).reshape(-1, self.config.dim)
+        try:
+            gids = self.log.assign(len(pts))
+            delta, segments = self._begin()
+            i = 0
+            while i < len(pts):
+                take = min(delta.free, len(pts) - i)
+                if take:
+                    slots = np.arange(delta.size, delta.size + take)
+                    chunk_g = gids[i : i + take]
+                    delta = delta.append(pts[i : i + take], chunk_g)
+                    self.log.place_delta(chunk_g, slots)
+                    i += take
+                if delta.free == 0:
+                    delta, segments = self._seal_delta(delta, segments)
+            self._commit(delta, segments)
+        except BaseException:
+            self._recover_log()
+            raise
+        return gids
+
+    def bulk_load(self, points: np.ndarray) -> np.ndarray:
+        """Build one segment directly from a batch (the LSM bulk path —
+        skips the delta arena and any intermediate merges)."""
+        pts = np.asarray(points, np.float32).reshape(-1, self.config.dim)
+        try:
+            gids = self.log.assign(len(pts))
+            delta, segments = self._begin()
+            if len(pts):
+                self._install(
+                    segments,
+                    Segment.from_points(
+                        pts, gids, self.config.spec, backend=self.config.backend
+                    ),
+                )
+                # repeated bulk loads must still respect the tier bound
+                delta, segments = self._maybe_compact(delta, segments)
+            self._commit(delta, segments)
+        except BaseException:
+            self._recover_log()
+            raise
+        return gids
+
+    def delete(self, gids: np.ndarray) -> int:
+        """Tombstone points by global id; returns how many were live."""
+        try:
+            grouped = self.log.pop(np.atleast_1d(np.asarray(gids, np.int64)))
+            if not grouped:
+                return 0
+            delta, segments = self._begin()
+            n = 0
+            for holder, pairs in grouped.items():
+                pos = np.asarray([p for p, _ in pairs], np.int64)
+                n += len(pos)
+                if holder == DELTA:
+                    delta = delta.tombstone(pos)
+                else:
+                    segments[holder] = segments[holder].tombstone(pos)
+            delta, segments = self._maybe_compact(delta, segments)
+            self._commit(delta, segments)
+        except BaseException:
+            self._recover_log()
+            raise
+        return n
+
+    def flush(self) -> None:
+        """Seal a partially-filled delta into a segment (e.g. before a
+        latency-critical read phase: tree search beats arena scan)."""
+        try:
+            delta, segments = self._begin()
+            if delta.size:
+                delta, segments = self._seal_delta(delta, segments)
+                self._commit(delta, segments)
+        except BaseException:
+            self._recover_log()
+            raise
+
+    def compact(self) -> None:
+        """Full compaction: everything live into one fresh segment; all
+        tombstones purged, delta drained."""
+        try:
+            pts, gids = self.live_points()
+            delta = DeltaBuffer.empty(
+                self.config.delta_capacity, self.config.dim
+            )
+            segments: Dict[int, Segment] = {}
+            if len(pts):
+                self._install(
+                    segments,
+                    Segment.from_points(
+                        pts, gids, self.config.spec, backend=self.config.backend
+                    ),
+                )
+            self._commit(delta, segments)
+        except BaseException:
+            self._recover_log()
+            raise
+
+    # -- read path -----------------------------------------------------------
+    def snapshot(self) -> Snapshot:
+        state = self._state  # single deref: the whole view, atomically
+        # n_live is derived from the captured state, not self.log — the
+        # log mutates eagerly inside a writer's uncommitted operation,
+        # so reading it here could disagree with the captured arrays
+        return Snapshot(
+            version=state.version,
+            n_live=sum(s.n_live for s in state.segments.values())
+            + state.delta.n_live,
+            segments=tuple(
+                SegmentView(
+                    dtree=s.dtree,
+                    stack_size=s.stack_size,
+                    gids_dev=s.gids_dev,
+                    n_live=s.n_live,
+                )
+                for s in state.segments.values()
+            ),
+            delta_points=state.delta.points,
+            delta_gids=state.delta.gids,
+            delta_size=state.delta.size,
+        )
+
+    def constrained_knn(self, queries, k: int, r) -> search_mod.StreamResult:
+        return search_mod.constrained_knn(self.snapshot(), queries, k, r)
+
+    def knn(self, queries, k: int) -> search_mod.StreamResult:
+        return search_mod.knn(self.snapshot(), queries, k)
+
+    # -- internals (operate on locals; publish only via _commit) -------------
+    def _begin(self) -> Tuple[DeltaBuffer, Dict[int, Segment]]:
+        state = self._state
+        return state.delta, dict(state.segments)
+
+    def _recover_log(self) -> None:
+        """Rederive the locator from the last published state after an
+        aborted mutation (O(n_live); failure path only). Gid assignment
+        is monotonic even across aborts — burned ids count as deleted."""
+        state = self._state
+        log = TombstoneLog()
+        log.next_gid = self.log.next_gid
+        for uid, seg in state.segments.items():
+            locals_ = np.nonzero(seg.live)[0]
+            log.place_segment(uid, seg.gids[locals_], locals_)
+        g = np.asarray(state.delta.gids[: state.delta.size])
+        slots = np.nonzero(g >= 0)[0]
+        log.place_delta(g[slots], slots)
+        log.n_deleted = log.next_gid - log.n_live
+        self.log = log
+
+    def _commit(self, delta: DeltaBuffer, segments: Dict[int, Segment]) -> None:
+        self._state = _State(
+            version=self._state.version + 1, delta=delta, segments=segments
+        )
+
+    def _install(self, segments: Dict[int, Segment], seg: Segment) -> None:
+        uid = self._next_uid
+        self._next_uid += 1
+        segments[uid] = seg
+        self.log.place_segment(uid, seg.gids, np.arange(seg.n_points))
+
+    def _seal_delta(self, delta, segments):
+        pts, gids = delta.live()
+        delta = DeltaBuffer.empty(self.config.delta_capacity, self.config.dim)
+        if len(pts):
+            self._install(
+                segments,
+                Segment.from_points(
+                    pts, gids, self.config.spec, backend=self.config.backend
+                ),
+            )
+        return self._maybe_compact(delta, segments)
+
+    def _maybe_compact(self, delta, segments):
+        cfg = self.config
+        while True:
+            # drop fully-dead segments outright
+            for uid in [u for u, s in segments.items() if s.n_live == 0]:
+                del segments[uid]
+            uids = list(segments.keys())
+            segs = [segments[u] for u in uids]
+            groups = plan_merges(segs, cfg.delta_capacity, cfg.merge_factor)
+            # a mostly-dead segment is rebuilt alone to purge its garbage
+            if not groups:
+                solo = [
+                    [i]
+                    for i, s in enumerate(segs)
+                    if s.n_dead > cfg.purge_fraction * s.n_points
+                ]
+                groups = solo[:1]
+            if not groups:
+                return delta, segments
+            for group in groups:
+                merged = merge_segments(
+                    [segs[i] for i in group], cfg.spec, backend=cfg.backend
+                )
+                for i in group:
+                    del segments[uids[i]]
+                if merged is not None:
+                    self._install(segments, merged)
+            # loop: the merged segment may tip the next tier over factor

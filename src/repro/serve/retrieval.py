@@ -2,7 +2,7 @@
 first-class feature of the LM stack (kNN-LM style).
 
 A datastore maps hidden states (keys) -> next tokens (values). At decode
-time the engine queries the ball*-tree for the K nearest stored states
+time the engine queries the index for the K nearest stored states
 WITHIN RADIUS r of the current hidden state — the paper's
 range-constrained KNN (§4.3) is exactly the right primitive here: far-
 away neighbors are noise, so the range constraint both prunes the search
@@ -11,6 +11,12 @@ away neighbors are noise, so the range constraint both prunes the search
 p(y) = (1 - lam_eff) * p_LM(y) + lam_eff * p_kNN(y),
 with lam_eff = lam * [any neighbor within r] and p_kNN a distance-
 softmax over retrieved values.
+
+The datastore is *mutable*: it is backed by the streaming LSM index
+(`repro.index`), so the kNN-LM memory can grow during decode (`add`
+newly generated (state, token) pairs) and forget (`delete` by the ids
+`add` returned) — online memory for long-running serving, with results
+always exact over the current live key set.
 """
 from __future__ import annotations
 
@@ -19,42 +25,96 @@ from typing import Optional
 
 import numpy as np
 
-import jax.numpy as jnp
-
-from repro.core import TreeSpec, build
-from repro.core import search_jax as sj
+from repro.core import TreeSpec
+from repro.index import StreamingConfig, StreamingIndex
 
 
 @dataclasses.dataclass
 class Datastore:
-    tree: object
-    dtree: object
-    stack: int
-    values: np.ndarray  # (N,) int32 next-token per stored state
+    index: StreamingIndex
+    # amortized-doubling buffer: slot gid holds the token for stored state
+    # gid, so per-step `add` is O(batch) rather than an O(N) reallocation
+    _values: np.ndarray
+    _n: int
+
+    @property
+    def values(self) -> np.ndarray:
+        """(next_gid,) int32 next-token per ever-stored state."""
+        return self._values[: self._n]
 
     @staticmethod
     def from_pairs(
-        keys: np.ndarray, values: np.ndarray, leaf_size: int = 64,
+        keys: np.ndarray,
+        values: np.ndarray,
+        leaf_size: int = 64,
         backend: str = "jax",
+        spec: Optional[TreeSpec] = None,
+        delta_capacity: int = 4096,
     ) -> "Datastore":
-        tree = build(keys, TreeSpec.ballstar(leaf_size=leaf_size), backend=backend)
-        return Datastore(
-            tree=tree,
-            dtree=sj.device_tree(tree),
-            stack=sj.max_depth(tree) + 3,
-            values=np.asarray(values, np.int32),
+        """Bulk-load an initial key set. `spec` overrides the default
+        ballstar spec entirely (splitter/threshold/alpha tunable by the
+        caller); `leaf_size` is a convenience for the default spec."""
+        keys = np.asarray(keys, np.float32)
+        vals = np.ascontiguousarray(values, np.int32).reshape(-1)
+        if len(vals) != len(keys):
+            raise ValueError(
+                f"from_pairs: {len(keys)} keys but {len(vals)} values"
+            )
+        spec = spec or TreeSpec.ballstar(leaf_size=leaf_size)
+        index = StreamingIndex(
+            StreamingConfig(
+                dim=keys.shape[1],
+                delta_capacity=delta_capacity,
+                spec=spec,
+                backend=backend,
+            )
         )
+        index.bulk_load(keys)
+        return Datastore(index=index, _values=vals, _n=len(vals))
+
+    @property
+    def n_keys(self) -> int:
+        return self.index.n_live
+
+    def add(self, keys: np.ndarray, values: np.ndarray) -> np.ndarray:
+        """Append (state, token) pairs to the live memory; returns the
+        global ids (pass to `delete` to evict)."""
+        vals = np.asarray(values, np.int32).reshape(-1)
+        keys = np.asarray(keys, np.float32).reshape(-1, self.index.config.dim)
+        if len(vals) != len(keys):  # validate BEFORE mutating the index
+            raise ValueError(
+                f"add: {len(keys)} keys but {len(vals)} values"
+            )
+        gids = self.index.add(keys)
+        # write by gid slot, not by cursor: stays correct even if a prior
+        # aborted index.add burned gids (slot gid always holds gid's token)
+        need = int(self.index.log.next_gid)
+        if need > len(self._values):
+            buf = np.zeros(max(need, 2 * len(self._values), 16), np.int32)
+            buf[: self._n] = self._values[: self._n]
+            self._values = buf
+        self._values[gids] = vals
+        self._n = need
+        return gids
+
+    def delete(self, gids: np.ndarray) -> int:
+        """Evict stored states by id (tombstoned now, purged at merge)."""
+        return self.index.delete(gids)
 
     def lookup(self, queries: np.ndarray, k: int, r: float):
-        """Constrained NN over the datastore. Returns (token values
+        """Constrained NN over the live datastore. Returns (token values
         (Q, k), distances (Q, k), valid mask)."""
-        res = sj.constrained_knn(
-            self.dtree, jnp.asarray(queries, jnp.float32), r, k, self.stack
-        )
-        idx = np.asarray(res.indices)
-        valid = idx >= 0
-        vals = self.values[np.clip(idx, 0, len(self.values) - 1)]
-        return vals, np.asarray(res.distances), valid
+        res = self.index.constrained_knn(queries, k, r)
+        idx = res.gids
+        # a gid at/past _n is a point whose token is not published yet (a
+        # concurrent add between index publish and the values write):
+        # treat it as a transient miss, never as another state's token
+        valid = (idx >= 0) & (idx < self._n)
+        if self._n == 0:  # empty store (e.g. bootstrap before first add)
+            return np.zeros(idx.shape, np.int32), res.distances, valid
+        vals = self._values[np.clip(idx, 0, self._n - 1)]
+        vals = np.where(valid, vals, 0)
+        return vals, res.distances, valid
 
 
 def knn_interpolate(

@@ -2,7 +2,13 @@
 data distribution (host searches here; batched jit in test_search_jax)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # hypothesis is optional: fall back to fixed deterministic cases
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
 
 from repro.core import TreeSpec, brute, build
 from repro.core import search_host as sh
@@ -54,14 +60,18 @@ def test_constrained_on_paper_distributions(dataset):
         )
 
 
-@settings(max_examples=20, deadline=None)
-@given(
-    n=st.integers(20, 400),
-    k=st.integers(1, 12),
-    seed=st.integers(0, 9999),
-    r_scale=st.floats(0.05, 3.0),
-)
-def test_constrained_property(n, k, seed, r_scale):
+# randomized cases via hypothesis when available, else a fixed grid that
+# spans the same regimes (tiny/large n, k=1..12, radius below/above scale)
+_CONSTRAINED_CASES = [
+    (20, 1, 11, 0.05),
+    (37, 3, 222, 0.3),
+    (100, 5, 3333, 0.8),
+    (233, 12, 4444, 1.5),
+    (400, 7, 9999, 3.0),
+]
+
+
+def _check_constrained_property(n, k, seed, r_scale):
     rng = np.random.default_rng(seed)
     pts = rng.standard_normal((n, 2))
     q = rng.standard_normal(2)
@@ -71,6 +81,22 @@ def test_constrained_property(n, k, seed, r_scale):
     bi, bd = brute.constrained_knn(pts, q, k, r)
     np.testing.assert_allclose(st_.distances, bd, rtol=1e-9, atol=1e-12)
     assert (st_.distances <= r + 1e-12).all()
+
+
+if HAVE_HYPOTHESIS:
+    test_constrained_property = settings(max_examples=20, deadline=None)(
+        given(
+            n=st.integers(20, 400),
+            k=st.integers(1, 12),
+            seed=st.integers(0, 9999),
+            r_scale=st.floats(0.05, 3.0),
+        )(_check_constrained_property)
+    )
+else:
+
+    @pytest.mark.parametrize("n,k,seed,r_scale", _CONSTRAINED_CASES)
+    def test_constrained_property(n, k, seed, r_scale):
+        _check_constrained_property(n, k, seed, r_scale)
 
 
 def test_visit_accounting_monotonic():

@@ -1,0 +1,219 @@
+"""Streaming LSM index == fresh static build over the live point set,
+under randomized interleaves of insert / delete / query (brute oracle),
+plus compaction tombstone-purge and Datastore add/delete behaviour."""
+import numpy as np
+import pytest
+
+from repro.core import TreeSpec, brute, build
+from repro.core import search_jax as sj
+from repro.index import StreamingConfig, StreamingIndex
+from repro.serve.retrieval import Datastore
+
+SPEC = TreeSpec.ballstar(leaf_size=8)
+
+
+def make_index(dim, cap=64, factor=3):
+    return StreamingIndex(
+        StreamingConfig(
+            dim=dim, delta_capacity=cap, spec=SPEC, merge_factor=factor
+        )
+    )
+
+
+def check_oracle(idx, queries, k, r):
+    """Index results == brute force over the index's own live point set."""
+    pts, gids = idx.live_points()
+    res = idx.constrained_knn(queries, k, r)
+    for i, q in enumerate(queries):
+        bi, bd = brute.constrained_knn(pts, q, k, r)
+        valid = res.gids[i] >= 0
+        assert valid.sum() == len(bi)
+        np.testing.assert_allclose(
+            res.distances[i][valid], bd, rtol=1e-4, atol=1e-5
+        )
+        assert set(res.gids[i][valid].tolist()) == set(gids[bi].tolist())
+
+
+def test_delta_only_search():
+    """Before the first seal every point lives in the device arena."""
+    rng = np.random.default_rng(0)
+    idx = make_index(3, cap=128)
+    idx.add(rng.standard_normal((50, 3)))
+    assert idx.stats()["n_segments"] == 0 and idx.stats()["delta_fill"] == 50
+    check_oracle(idx, rng.standard_normal((6, 3)), k=5, r=1.2)
+    check_oracle(idx, rng.standard_normal((4, 3)), k=3, r=np.inf)
+
+
+def test_empty_and_overfull_k():
+    idx = make_index(2, cap=16)
+    res = idx.knn(np.zeros((2, 2)), k=4)
+    assert (res.gids == -1).all() and np.isinf(res.distances).all()
+    idx.add(np.random.default_rng(1).standard_normal((5, 2)))
+    res = idx.knn(np.zeros((1, 2)), k=9)  # k > n_live
+    assert (res.gids[0] >= 0).sum() == 5
+
+
+def test_interleaved_ops_match_oracle():
+    """Randomized insert/delete/query interleave across seals and merges."""
+    rng = np.random.default_rng(42)
+    idx = make_index(3, cap=64, factor=3)
+    queries = rng.standard_normal((5, 3))
+    for step in range(12):
+        idx.add(rng.standard_normal((rng.integers(20, 90), 3)))
+        live = idx.live_gids()
+        if step % 2 and len(live) > 30:
+            idx.delete(rng.choice(live, size=len(live) // 6, replace=False))
+        if step % 3 == 2:
+            k = int(rng.integers(1, 9))
+            r = float(rng.uniform(0.4, 2.5))
+            check_oracle(idx, queries, k, r)
+    st = idx.stats()
+    assert st["n_segments"] >= 1  # seals + merges actually happened
+    check_oracle(idx, queries, k=7, r=np.inf)
+
+
+def test_matches_fresh_static_build():
+    """Acceptance: streamed index == static ball*-tree on the live set."""
+    rng = np.random.default_rng(7)
+    idx = make_index(2, cap=64)
+    g = idx.add(rng.standard_normal((300, 2)))
+    idx.delete(g[::5])
+    idx.add(rng.standard_normal((40, 2)))
+
+    pts, gids = idx.live_points()
+    tree = build(pts, SPEC, backend="jax")
+    queries = rng.standard_normal((8, 2))
+    k, r = 6, 0.9
+    static = sj.search(tree, queries, k=k, r=r)
+    stream = idx.constrained_knn(queries, k, r)
+    d_static = np.asarray(static.distances)
+    np.testing.assert_allclose(
+        np.where(np.isinf(d_static), -1.0, d_static),
+        np.where(np.isinf(stream.distances), -1.0, stream.distances),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+    i_static = np.asarray(static.indices)  # local ids into `pts`
+    for row_s, row_l in zip(i_static, stream.gids):
+        assert {int(gids[j]) for j in row_s[row_s >= 0]} == set(
+            row_l[row_l >= 0].tolist()
+        )
+
+
+def test_compaction_purges_tombstones():
+    rng = np.random.default_rng(3)
+    idx = make_index(2, cap=64)
+    g = idx.add(rng.standard_normal((500, 2)))
+    idx.delete(rng.choice(g, size=200, replace=False))
+    queries = rng.standard_normal((6, 2))
+    before = idx.constrained_knn(queries, 5, 1.0)
+
+    idx.compact()
+    st = idx.stats()
+    assert st["n_segments"] == 1
+    assert st["n_dead_in_segments"] == 0 and st["delta_fill"] == 0
+    # physically stored == live: tombstones are gone, not just masked
+    (seg,) = idx.segments
+    assert seg.n_points == idx.n_live == 300
+    after = idx.constrained_knn(queries, 5, 1.0)
+    np.testing.assert_allclose(
+        np.where(np.isinf(before.distances), -1.0, before.distances),
+        np.where(np.isinf(after.distances), -1.0, after.distances),
+        rtol=1e-4,
+        atol=1e-5,
+    )
+    assert (before.gids == after.gids).all()
+    check_oracle(idx, queries, k=5, r=1.0)
+
+
+def test_tier_merges_bound_segment_count():
+    """Size-tiered policy keeps the segment count logarithmic."""
+    rng = np.random.default_rng(9)
+    idx = make_index(2, cap=32, factor=2)
+    for _ in range(16):
+        idx.add(rng.standard_normal((32, 2)))
+    st = idx.stats()
+    # 512 points in 32-point seals under factor 2 -> log2(16) tiers max
+    assert st["n_segments"] <= 5
+    check_oracle(idx, rng.standard_normal((4, 2)), k=5, r=1.0)
+
+
+def test_snapshot_isolation():
+    """A reader's snapshot is immune to later writes (MVCC)."""
+    rng = np.random.default_rng(11)
+    idx = make_index(2, cap=64)
+    idx.add(rng.standard_normal((100, 2)))
+    snap = idx.snapshot()
+    from repro.index import search as search_mod
+
+    q = rng.standard_normal((3, 2))
+    before = search_mod.constrained_knn(snap, q, 5, np.inf)
+    idx.add(rng.standard_normal((80, 2)) + 5.0)
+    idx.delete(idx.live_gids()[:50])
+    after_old_snap = search_mod.constrained_knn(snap, q, 5, np.inf)
+    assert (before.gids == after_old_snap.gids).all()
+    np.testing.assert_allclose(
+        before.distances, after_old_snap.distances, rtol=0, atol=0
+    )
+    assert idx.snapshot().version > snap.version
+
+
+def test_snapshot_n_live_survives_delta_delete_then_add():
+    """Regression: DeltaBuffer.append must carry n_dead through, else a
+    delete-in-delta followed by an add overstates the snapshot's n_live."""
+    from repro.index import search as search_mod
+
+    rng = np.random.default_rng(13)
+    idx = make_index(2, cap=32)
+    g = idx.add(rng.standard_normal((20, 2)))  # delta only
+    idx.delete(g[:5])
+    idx.add(rng.standard_normal((10, 2)))      # append after tombstones
+    snap = idx.snapshot()
+    assert snap.n_live == idx.n_live == 25
+    res = search_mod.knn(snap, np.zeros((1, 2)), k=40)
+    assert int((res.gids[0] >= 0).sum()) == 25
+
+
+def test_delete_idempotent_and_missing():
+    idx = make_index(2, cap=32)
+    g = idx.add(np.random.default_rng(0).standard_normal((10, 2)))
+    assert idx.delete(g[:3]) == 3
+    assert idx.delete(g[:3]) == 0  # already dead: no-op
+    assert idx.delete(np.asarray([10_000])) == 0  # never existed
+    assert idx.n_live == 7
+
+
+def test_datastore_add_delete_lookup():
+    rng = np.random.default_rng(5)
+    keys = rng.standard_normal((200, 4)).astype(np.float32)
+    vals = rng.integers(0, 50, 200)
+    store = Datastore.from_pairs(keys, vals, leaf_size=16, delta_capacity=64)
+    assert store.n_keys == 200
+
+    new_keys = rng.standard_normal((30, 4)).astype(np.float32)
+    new_vals = rng.integers(50, 99, 30)
+    gids = store.add(new_keys, new_vals)
+    assert store.n_keys == 230
+    # a query at a new key retrieves its own value
+    nv, nd, ok = store.lookup(new_keys[:1], k=1, r=1e-3)
+    assert ok[0, 0] and nv[0, 0] == new_vals[0]
+
+    store.delete(gids)
+    assert store.n_keys == 200
+    nv, nd, ok = store.lookup(new_keys[:1], k=1, r=1e-3)
+    assert not ok.any()  # evicted states no longer match
+
+
+def test_from_pairs_spec_passthrough():
+    keys = np.random.default_rng(2).standard_normal((100, 3)).astype(np.float32)
+    vals = np.zeros(100, np.int64)
+    spec = TreeSpec.kd(leaf_size=4)
+    store = Datastore.from_pairs(keys, vals, spec=spec)
+    assert store.index.config.spec is spec
+    (seg,) = store.index.segments
+    assert seg.tree.spec.splitter == "kd"
+    assert seg.tree.spec.leaf_size == 4
+    # default path still honours leaf_size convenience arg
+    store2 = Datastore.from_pairs(keys, vals, leaf_size=16)
+    assert store2.index.config.spec.splitter == "ballstar"
+    assert store2.index.config.spec.leaf_size == 16
