@@ -8,6 +8,7 @@ records both scales for the headline tables.
 """
 from __future__ import annotations
 
+import os
 import time
 
 import numpy as np
@@ -28,7 +29,13 @@ SPECS = {
 
 
 def sizes(full: bool):
-    return (FULL_N, FULL_Q) if full else (FAST_N, FAST_Q)
+    """Point/query counts; BENCH_N / BENCH_Q env vars override both
+    scales (used by the CI benchmark-smoke leg to run tiny sizes)."""
+    n, q = (FULL_N, FULL_Q) if full else (FAST_N, FAST_Q)
+    return (
+        int(os.environ.get("BENCH_N", n)),
+        int(os.environ.get("BENCH_Q", q)),
+    )
 
 
 def dataset(name: str, n: int, seed: int = 0):

@@ -45,12 +45,16 @@ def main() -> None:
     chosen = args.only.split(",") if args.only else list(sections)
     print("name,us_per_call,derived")
     t0 = time.time()
+    failed = []
     for name in chosen:
         try:
             sections[name](full=args.full)
         except Exception as e:  # keep the harness running; report failure
             print(f"{name},0.00,ERROR:{type(e).__name__}:{e}", file=sys.stdout)
+            failed.append(name)
     print(f"total,{(time.time() - t0) * 1e6:.0f},bench_wall_time")
+    if failed:  # nonzero exit so the CI benchmark-smoke leg catches drift
+        sys.exit(f"benchmark sections failed: {','.join(failed)}")
 
 
 if __name__ == "__main__":

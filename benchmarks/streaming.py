@@ -19,6 +19,7 @@ import numpy as np
 from repro.core import TreeSpec, build
 from repro.core import search_jax as sj
 from repro.index import StreamingConfig, StreamingIndex
+from repro.query import engine as qengine
 
 from .common import dataset, emit, queries_for, radius_for, sizes
 
@@ -43,10 +44,18 @@ def run(full: bool = False) -> None:
             merge_factor=4,
         )
     )
+    # jit compile-cache accounting per phase: with pow2 shape classes
+    # the traversal compiles are bounded by the distinct classes, not by
+    # every novel segment shape a merge produces — the distinct-compiles
+    # metric below is what makes that win (or a regression) visible
+    stats0 = qengine.compile_stats()
+    sigs0 = len(qengine.observed_signatures())
+
     idx.bulk_load(pts[:n_prefill])
 
     # warm up the jit caches so compile time is not billed to the stream
     idx.constrained_knn(queries[:q_batch], k, r)
+    stats_warm = qengine.compile_stats()
 
     t_insert = t_query = 0.0
     n_inserted = n_queried = n_deleted = 0
@@ -71,6 +80,30 @@ def run(full: bool = False) -> None:
             live = idx.live_gids()
             victims = rng.choice(live, size=len(gids) // 10, replace=False)
             n_deleted += idx.delete(victims)
+
+    stats_stream = qengine.compile_stats()
+    if stats_stream["traversal_compiles"] is None:  # private jit API gone
+        c_warm = c_stream = hits = "n/a"
+    else:
+        c_warm = stats_warm["traversal_compiles"] - stats0["traversal_compiles"]
+        c_stream = (
+            stats_stream["traversal_compiles"]
+            - stats_warm["traversal_compiles"]
+        )
+        # hits over traversal dispatches only (delta-arena scans have
+        # their own cache and would over-count)
+        hits = (
+            stats_stream["traversal_dispatches"]
+            - stats_warm["traversal_dispatches"]
+            - c_stream
+        )
+    emit(
+        "streaming_compile_cache",
+        0.0,
+        f"compiles_warmup={c_warm}_compiles_stream={c_stream}"
+        f"_cache_hits_stream={hits}"
+        f"_distinct_signatures={len(qengine.observed_signatures()) - sigs0}",
+    )
 
     st = idx.stats()
     emit(

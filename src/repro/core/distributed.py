@@ -40,6 +40,8 @@ _SHARD_MAP_KW = (
     else {"check_rep": False}
 )
 
+from repro.query import merge as qmerge
+
 from . import build_jax, search_jax as sj
 from .types import Tree, TreeSpec
 
@@ -157,14 +159,11 @@ def constrained_knn(
         # gather every shard's K-best: (n_shards, Q, k)
         all_d = jax.lax.all_gather(res.distances, axis)
         all_i = jax.lax.all_gather(gids, axis)
-        # exact merge: top-K of the gathered candidates
-        Q = qs.shape[0]
-        flat_d = all_d.transpose(1, 0, 2).reshape(Q, n_shards * k)
-        flat_i = all_i.transpose(1, 0, 2).reshape(Q, n_shards * k)
-        order = jnp.argsort(flat_d, axis=1)[:, :k]
-        return (
-            jnp.take_along_axis(flat_d, order, axis=1),
-            jnp.take_along_axis(flat_i, order, axis=1),
+        # exact merge: each shard's k-best is already ascending-sorted,
+        # so fold them with the unified sorted-merge primitive (no
+        # argsort of the n_shards*k concatenation)
+        return qmerge.merge_parts(
+            [(all_d[s], all_i[s]) for s in range(n_shards)], k
         )
 
     dist, idx = search(index.stacked, q, offsets)

@@ -25,6 +25,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+import repro.query.merge as qmerge
+
 from .types import Tree
 
 
@@ -87,17 +89,19 @@ def _traverse_one(dt: DeviceTree, q, r, k: int, stack_size: int):
         is_leaf = dt.child_l[node] < 0
 
         # ---- leaf evaluation (masked; discarded unless leaf & !prune) ----
+        # `best` is kept ascending-sorted, so the update is the unified
+        # merge primitive (leaf top-k, then a sorted two-way merge) —
+        # no argsort of the (k + cap)-wide concatenation
         rank = jnp.maximum(dt.leaf_of_node[node], 0)
         pts = dt.leaf_points[rank]            # (cap, d)
         li = dt.leaf_index[rank]              # (cap,)
         dl = jnp.sqrt(jnp.maximum(((pts - q) ** 2).sum(-1), 0.0))
         ok = (li >= 0) & (dl <= r) & (dl < d_s)
         dl = jnp.where(ok, dl, inf)
-        cand_d = jnp.concatenate([best_d, dl])
-        cand_i = jnp.concatenate([best_i, li])
-        order = jnp.argsort(cand_d)[:k]
-        new_d = cand_d[order]
-        new_i = cand_i[order]
+        li = jnp.where(ok, li, -1)
+        ld, lidx = qmerge.topk_sorted(dl, li, k)
+        new_d, new_i = qmerge.merge_sorted(best_d, best_i, ld, lidx)
+        new_d, new_i = new_d[:k], new_i[:k]
         take_leaf = is_leaf & ~prune
         best_d = jnp.where(take_leaf, new_d, best_d)
         best_i = jnp.where(take_leaf, new_i, best_i)
@@ -172,6 +176,40 @@ def knn(dt: DeviceTree, queries: jax.Array, k: int, stack_size: int):
     return KnnResult(indices=best_i, distances=best_d, nodes_visited=visits)
 
 
+class StackedResult(NamedTuple):
+    gids: jax.Array           # (Q, k) merged global ids, -1 = no result
+    distances: jax.Array      # (Q, k) merged, ascending; inf = no result
+    nodes_visited: jax.Array  # (Q,) summed over the stacked segments
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stack_size"))
+def constrained_knn_stacked(
+    dts: DeviceTree,      # (S, …)-stacked same-shape-class segments
+    gids: jax.Array,      # (S, n) i32 local id -> global id, -1 padding
+    queries: jax.Array,   # (Q, d)
+    r,                    # scalar or (Q,)
+    k: int,
+    stack_size: int,
+) -> StackedResult:
+    """All S same-shape segments in ONE device dispatch: vmap the
+    traversal over the stacked segment axis, map local hits to global
+    ids on device, and fold the S sorted k-bests with the unified merge
+    — the answer leaves the device already merged."""
+    r = jnp.broadcast_to(jnp.asarray(r, dts.center.dtype), queries.shape[:1])
+    n = gids.shape[1]
+
+    def per_segment(dt, g):
+        bd, bi, v = jax.vmap(
+            lambda q, ri: _traverse_one(dt, q, ri, k, stack_size)
+        )(queries, r)
+        gg = jnp.where(bi >= 0, g[jnp.clip(bi, 0, n - 1)], -1)
+        return bd, gg, v
+
+    bd, gg, v = jax.vmap(per_segment)(dts, gids)  # (S, Q, k) ×2, (S, Q)
+    d, g = qmerge.merge_parts([(bd[s], gg[s]) for s in range(bd.shape[0])], k)
+    return StackedResult(gids=g, distances=d, nodes_visited=v.sum(0))
+
+
 def search(
     tree: Tree,
     queries: np.ndarray,
@@ -179,9 +217,11 @@ def search(
     r: float | np.ndarray = np.inf,
     dtype=jnp.float32,
 ) -> KnnResult:
-    """Convenience wrapper: host tree in, jit-batched search out."""
-    dt = device_tree(tree, dtype)
-    stack_size = max_depth(tree) + 3
-    return constrained_knn(
-        dt, jnp.asarray(np.asarray(queries), dtype), r, k, stack_size
-    )
+    """Convenience wrapper: host tree in, batched search out — a thin
+    adapter over the unified query engine (shape-class padded, so a
+    static tree shares its compiled traversal with any streaming
+    segment of the same class)."""
+    from repro.query import engine as qengine  # lazy: engine imports us
+    from repro.query.spec import QuerySpec
+
+    return qengine.search_tree(tree, queries, QuerySpec(k=k, radius=r, dtype=dtype))

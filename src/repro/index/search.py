@@ -1,12 +1,15 @@
-"""Unified exact search over a snapshot: segments ∪ delta, top-k merged.
+"""Snapshot search: a thin adapter over the unified query engine.
 
-Each segment answers with the batched jit traversal (`search_jax`), the
-delta arena answers with one exhaustive pairwise-kernel pass, and the
-global answer is the top-k of the concatenated per-part top-k's — the
-same merge idiom as the distributed index (`core/distributed.py`), and
-exact for the same reason: every live point belongs to exactly one
+The engine (`repro.query.engine`) groups the snapshot's segments by
+pow2 shape class, answers each class in ONE stacked jit dispatch, scans
+the delta arena with the Pallas pairwise kernel, and folds everything
+with the single on-device sorted-merge primitive (`repro.query.merge`)
+— exact for the usual reason: every live point belongs to exactly one
 part, each part's k-best is exact over its own points, and the union of
 per-part k-bests is a superset of the global k-best.
+
+An all-tombstoned (or empty) snapshot short-circuits on the host: all
+-1 gids, zero device dispatches.
 """
 from __future__ import annotations
 
@@ -14,11 +17,6 @@ from typing import NamedTuple
 
 import numpy as np
 
-import jax.numpy as jnp
-
-from repro.core import search_jax as sj
-
-from . import delta as delta_mod
 from .snapshot import Snapshot
 
 
@@ -31,41 +29,13 @@ def constrained_knn(
     snap: Snapshot, queries: np.ndarray, k: int, r
 ) -> StreamResult:
     """Exact constrained-KNN over the snapshot's live point set."""
-    q = jnp.asarray(np.asarray(queries, np.float32).reshape(-1, snap.dim))
-    nq = q.shape[0]
-    rb = jnp.broadcast_to(jnp.asarray(r, jnp.float32), (nq,))
+    from repro.query import QuerySpec
+    from repro.query import engine as qengine
 
-    parts_d, parts_g = [], []
-    for seg in snap.segments:
-        res = sj.constrained_knn(seg.dtree, q, rb, k, seg.stack_size)
-        n = seg.gids_dev.shape[0]
-        g = jnp.where(
-            res.indices >= 0,
-            seg.gids_dev[jnp.clip(res.indices, 0, n - 1)],
-            -1,
-        )
-        parts_d.append(res.distances)
-        parts_g.append(g)
-    if snap.delta_size:
-        dd, dg = delta_mod.search(snap.delta_points, snap.delta_gids, q, k, rb)
-        parts_d.append(dd)
-        parts_g.append(dg)
-
-    if not parts_d:  # empty index
-        return StreamResult(
-            gids=np.full((nq, k), -1, np.int64),
-            distances=np.full((nq, k), np.inf, np.float32),
-        )
-
-    cand_d = jnp.concatenate(parts_d, axis=1)
-    cand_g = jnp.concatenate(parts_g, axis=1)
-    if cand_d.shape[1] > k:
-        order = jnp.argsort(cand_d, axis=1)[:, :k]
-        cand_d = jnp.take_along_axis(cand_d, order, axis=1)
-        cand_g = jnp.take_along_axis(cand_g, order, axis=1)
+    res = qengine.execute(snap, queries, QuerySpec(k=k, radius=r))
     return StreamResult(
-        gids=np.asarray(cand_g, np.int64),
-        distances=np.asarray(cand_d, np.float32),
+        gids=np.asarray(res.gids, np.int64),
+        distances=np.asarray(res.distances, np.float32),
     )
 
 

@@ -22,6 +22,7 @@ LSM amortization argument.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import math
 from typing import Dict, List, Sequence
 
@@ -32,17 +33,26 @@ import jax.numpy as jnp
 from repro.core import build
 from repro.core import search_jax as sj
 from repro.core.types import Tree, TreeSpec
+from repro.query import shapes
+
+# Monotonic content token: stamped at every seal/merge AND refreshed by
+# every tombstone, so a token uniquely identifies one immutable version
+# of a segment's device arrays. The query engine keys its stacked
+# shape-class batches on these tokens.
+_TOKENS = itertools.count()
 
 
 @dataclasses.dataclass(frozen=True)
 class Segment:
     tree: Tree                 # host tree (kept for rebuilds / inspection)
-    dtree: sj.DeviceTree       # device arrays; leaf_index carries tombstones
-    stack_size: int
+    dtree: sj.DeviceTree       # device arrays, padded to the pow2 shape
+    #                            class; leaf_index carries tombstones
+    stack_size: int            # pow2 shape-class stack bound
     gids: np.ndarray           # (n,) i64: local original id -> global id
-    gids_dev: jnp.ndarray      # (n,) i32 copy for on-device id mapping
+    gids_dev: jnp.ndarray      # (n_pow2,) i32 on-device id map, -1 padded
     slot_of_local: np.ndarray  # (n, 2) i32: local id -> (leaf rank, slot)
     live: np.ndarray           # (n,) bool host mask (False = tombstoned)
+    token: int                 # unique id of this device-array version
     n_dead: int = 0
 
     @staticmethod
@@ -59,14 +69,21 @@ class Segment:
         slot_of_local = np.full((n, 2), -1, np.int32)
         ranks, slots = np.nonzero(li >= 0)
         slot_of_local[li[ranks, slots]] = np.stack([ranks, slots], 1)
+        # pad to the pow2 shape class HERE (seal/merge time): every
+        # segment in a class shares one compiled traversal, so the jit
+        # cache is bounded by log2(N) classes instead of growing with
+        # every novel merge size
         return Segment(
             tree=tree,
-            dtree=sj.device_tree(tree),
-            stack_size=sj.max_depth(tree) + 3,
+            dtree=shapes.pad_device_tree(sj.device_tree(tree)),
+            stack_size=shapes.padded_stack_size(sj.max_depth(tree)),
             gids=np.asarray(gids, np.int64),
-            gids_dev=jnp.asarray(np.asarray(gids), jnp.int32),
+            gids_dev=shapes.pad_gids(
+                jnp.asarray(np.asarray(gids), jnp.int32)
+            ),
             slot_of_local=slot_of_local,
             live=np.ones(n, bool),
+            token=next(_TOKENS),
         )
 
     @property
@@ -88,6 +105,7 @@ class Segment:
             self,
             dtree=self.dtree._replace(leaf_index=leaf_index),
             live=live,
+            token=next(_TOKENS),  # new array version: invalidate caches
             n_dead=self.n_dead + len(local_ids),
         )
 

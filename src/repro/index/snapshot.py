@@ -23,10 +23,13 @@ import jax.numpy as jnp
 class SegmentView:
     """The read-only slice of a segment that search needs on device."""
 
-    dtree: object         # search_jax.DeviceTree (leaf_index holds tombstones)
+    dtree: object         # search_jax.DeviceTree (pow2 shape-class padded;
+    #                       leaf_index holds tombstones)
     stack_size: int
-    gids_dev: jax.Array   # (n,) i32 local original id -> global id
+    gids_dev: jax.Array   # (n_pow2,) i32 local original id -> global id
     n_live: int
+    token: int            # unique id of this device-array version — the
+    #                       query engine's stacked-batch cache key
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +42,7 @@ class Snapshot:
     delta_points: jax.Array  # (capacity, d)
     delta_gids: jax.Array    # (capacity,) i32, -1 = empty/dead
     delta_size: int          # append cursor at capture time
+    delta_n_live: int        # live (non-tombstoned) delta points
 
     @property
     def n_parts(self) -> int:

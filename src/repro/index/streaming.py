@@ -252,12 +252,14 @@ class StreamingIndex:
                     stack_size=s.stack_size,
                     gids_dev=s.gids_dev,
                     n_live=s.n_live,
+                    token=s.token,
                 )
                 for s in state.segments.values()
             ),
             delta_points=state.delta.points,
             delta_gids=state.delta.gids,
             delta_size=state.delta.size,
+            delta_n_live=state.delta.n_live,
         )
 
     def constrained_knn(self, queries, k: int, r) -> search_mod.StreamResult:

@@ -1,0 +1,30 @@
+"""Unified query engine: the one read path over every index form.
+
+    plan:     group a snapshot's segments into pow2 *shape classes*
+              (`shapes.py`) — bounded jit cache, stable across merges
+    traverse: one stacked vmap dispatch per class
+              (`core/search_jax.constrained_knn_stacked`); the delta
+              arena joins as a degenerate class (Pallas pairwise scan)
+    merge:    one on-device sorted-merge primitive (`merge.py`) folds
+              the per-part k-bests — no argsort of the concatenation
+
+`core/search_jax.search`, `index/search.constrained_knn`,
+`core/distributed`, and `serve/retrieval.Datastore.search` are thin
+adapters over this package.
+
+Note: `engine` is imported lazily (PEP 562) — it pulls in core and
+index, while `merge`/`spec`/`shapes` stay dependency-light so
+lower layers can import them without cycles.
+"""
+from . import merge  # noqa: F401  (dependency-free: safe to load eagerly)
+from .spec import QuerySpec  # noqa: F401
+
+__all__ = ["merge", "shapes", "engine", "QuerySpec"]
+
+
+def __getattr__(name):
+    if name in ("engine", "shapes"):
+        import importlib
+
+        return importlib.import_module(f"{__name__}.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,248 @@
+"""Unified query engine: plan (shape classes) -> stacked traversal ->
+single on-device merge.
+
+This is the one read path. Every caller — the static-tree convenience
+(`core/search_jax.search`), the streaming snapshot search
+(`index/search`), and the mutable datastore (`serve/retrieval`) — is a
+thin adapter over `execute`/`search_tree`, so there is exactly one
+implementation of dispatch, gid mapping, and the top-k merge.
+
+Planner: a snapshot's segments are grouped by their power-of-two
+*shape class* (`query/shapes.py`); all S segments of one class are
+answered by a single `constrained_knn_stacked` jit dispatch over a
+(S_pow2, …)-stacked DeviceTree batch (padded with an all-dead dummy
+member), and the delta arena joins as a degenerate class via the
+Pallas pairwise kernel. The per-part sorted k-bests are folded with
+`query/merge.py` on device. So a mixed segments∪delta query costs
+O(#classes) dispatches — O(1) per class, not O(#segments) — and the
+jit cache is keyed on shape classes, not on every novel merge size.
+
+The stacked batches are memoized (small LRU) on the segments' content
+tokens: a steady read phase re-stacks nothing, and any seal / merge /
+tombstone refreshes the affected tokens, invalidating exactly the
+classes it touched.
+
+Instrumentation: `dispatch_count()` (device search dispatches),
+`observed_signatures()` (distinct dispatch signatures the planner has
+issued), and `compile_stats()` (traversal jit-cache entries) — used by
+the compile-bound tests and `benchmarks/streaming.py`.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import search_jax as sj
+from repro.query import merge as qmerge
+from repro.query import shapes
+from repro.query.spec import QuerySpec
+
+
+class EngineResult(NamedTuple):
+    gids: np.ndarray            # (Q, k) global ids, -1 = no result
+    distances: np.ndarray       # (Q, k) +inf where no result
+    nodes_visited: Optional[np.ndarray]  # (Q,) traversal visits, or None
+
+
+# -- instrumentation ---------------------------------------------------------
+_DISPATCHES = 0            # ALL device search dispatches (traversal + delta)
+_TRAVERSAL_DISPATCHES = 0  # stacked-traversal dispatches only
+_SIGNATURES = set()        # distinct stacked-dispatch signatures ever issued
+
+
+def dispatch_count() -> int:
+    return _DISPATCHES
+
+
+def observed_signatures() -> frozenset:
+    return frozenset(_SIGNATURES)
+
+
+def compile_stats() -> dict:
+    """Traversal jit-cache entry count + dispatch counters.
+
+    `traversal_compiles` is None when the jit cache-size API is
+    unavailable (it is private to jax) — callers must treat None as
+    "unknown", never as zero."""
+    sizes = [
+        fn._cache_size()
+        for fn in (sj.constrained_knn_stacked, sj.constrained_knn, sj.knn)
+        if callable(getattr(fn, "_cache_size", None))
+    ]
+    return {
+        "traversal_compiles": sum(sizes) if sizes else None,
+        "traversal_dispatches": _TRAVERSAL_DISPATCHES,
+        "dispatches": _DISPATCHES,
+    }
+
+
+# -- planner -----------------------------------------------------------------
+class ClassGroup(NamedTuple):
+    cls: shapes.ShapeClass
+    views: tuple  # SegmentViews of this class, token-sorted
+
+
+def plan(snapshot) -> List[ClassGroup]:
+    """Group a snapshot's live segments by shape class (token-sorted
+    within a class so the stacked-batch cache key is stable)."""
+    groups = {}
+    for view in snapshot.segments:
+        if view.n_live == 0:  # fully tombstoned: nothing to dispatch
+            continue
+        cls = shapes.shape_class_of(
+            view.dtree, view.stack_size, int(view.gids_dev.shape[0])
+        )
+        groups.setdefault(cls, []).append(view)
+    return [
+        ClassGroup(cls, tuple(sorted(vs, key=lambda v: v.token)))
+        for cls, vs in sorted(groups.items())
+    ]
+
+
+# -- stacked-batch cache -----------------------------------------------------
+# LRU keyed on (class, member tokens). Segments are always f32 (sealed
+# by Segment.from_points), so dtype is not part of the key. Per class
+# at most TWO batches are retained — the current one plus the most
+# recently used predecessor, which an MVCC reader holding an older
+# snapshot may still be alternating with; older superseded batches are
+# evicted eagerly so mutations cannot pin a pile of near-identical
+# class-sized device copies. Guarded by a lock: snapshots promise
+# torn-free concurrent readers, and those readers share this dict.
+_STACK_CACHE: "collections.OrderedDict" = collections.OrderedDict()
+_STACK_CACHE_MAX = 8
+_STACK_LOCK = threading.Lock()
+
+
+def _stacked_views(group: ClassGroup) -> Tuple[sj.DeviceTree, jnp.ndarray]:
+    """(S_pow2, …)-stacked DeviceTree + gid table for one shape class,
+    memoized on the member segments' content tokens."""
+    key = (group.cls, tuple(v.token for v in group.views))
+    with _STACK_LOCK:
+        hit = _STACK_CACHE.get(key)
+        if hit is not None:
+            _STACK_CACHE.move_to_end(key)
+            return hit
+    # build outside the lock (two racing builders produce identical
+    # content; last insert wins)
+    dummy_dt, dummy_g = shapes.dummy_member(group.cls, jnp.float32)
+    n_pad = shapes.next_pow2(len(group.views)) - len(group.views)
+    trees = [v.dtree for v in group.views] + [dummy_dt] * n_pad
+    stacked = sj.DeviceTree(
+        *[
+            jnp.stack([getattr(t, f) for t in trees])
+            for f in sj.DeviceTree._fields
+        ]
+    )
+    gids = jnp.stack([v.gids_dev for v in group.views] + [dummy_g] * n_pad)
+    with _STACK_LOCK:
+        same = [s for s in _STACK_CACHE if s[0] == group.cls]
+        for stale in same[:-1]:  # keep only the most recent predecessor
+            del _STACK_CACHE[stale]
+        _STACK_CACHE[key] = (stacked, gids)
+        while len(_STACK_CACHE) > _STACK_CACHE_MAX:
+            _STACK_CACHE.popitem(last=False)
+    return stacked, gids
+
+
+def _dispatch_stacked(stacked, gids, q, rb, k: int, stack_size: int, cls):
+    global _DISPATCHES, _TRAVERSAL_DISPATCHES
+    _DISPATCHES += 1
+    _TRAVERSAL_DISPATCHES += 1
+    _SIGNATURES.add(
+        (cls, int(gids.shape[0]), int(q.shape[0]), k, str(q.dtype))
+    )
+    return sj.constrained_knn_stacked(stacked, gids, q, rb, k, stack_size)
+
+
+# -- executor ----------------------------------------------------------------
+def execute(snapshot, queries, spec: QuerySpec) -> EngineResult:
+    """Exact constrained-KNN over a streaming snapshot (segments∪delta)."""
+    k = spec.k
+    # the streaming index is f32 end-to-end (segments are sealed as f32,
+    # the delta kernel is f32): reject other dtypes instead of silently
+    # promoting/demoting depending on batch padding. dtype overrides are
+    # for static trees (search_tree), which are devicized per request.
+    if jnp.dtype(spec.dtype) != jnp.dtype(jnp.float32):
+        raise ValueError(
+            "snapshot search is float32-only; QuerySpec.dtype overrides "
+            f"apply to search_tree (got {jnp.dtype(spec.dtype).name})"
+        )
+    q_host = np.asarray(queries).reshape(-1, snapshot.dim)
+    nq = q_host.shape[0]
+    if snapshot.n_live == 0:
+        # all points tombstoned (or never inserted): answer on the host,
+        # zero device dispatches
+        return EngineResult(
+            gids=np.full((nq, k), -1, np.int32),
+            distances=np.full((nq, k), np.inf, np.float32),
+            nodes_visited=np.zeros(nq, np.int32)
+            if spec.return_visits
+            else None,
+        )
+    dtype = jnp.dtype(spec.dtype)
+    q = jnp.asarray(q_host, dtype)
+    rb = jnp.broadcast_to(jnp.asarray(spec.radius, dtype), (nq,))
+
+    global _DISPATCHES
+    parts: List[Tuple[jnp.ndarray, jnp.ndarray]] = []
+    visits = None
+    for group in plan(snapshot):
+        stacked, gids = _stacked_views(group)
+        res = _dispatch_stacked(
+            stacked, gids, q, rb, k, group.cls.stack_size, group.cls
+        )
+        parts.append((res.distances, res.gids))
+        if spec.return_visits:
+            # each pow2-padding dummy contributes exactly one root visit
+            # per query; subtract it so accounting matches the real trees
+            n_pad = shapes.next_pow2(len(group.views)) - len(group.views)
+            gv = res.nodes_visited - n_pad
+            visits = gv if visits is None else visits + gv
+    if snapshot.delta_n_live > 0:
+        from repro.index import delta as delta_mod
+
+        _DISPATCHES += 1
+        dd, dg = delta_mod.search(
+            snapshot.delta_points, snapshot.delta_gids, q, k, rb
+        )
+        parts.append((dd, dg))
+
+    d, g = qmerge.merge_parts(parts, k)
+    # materialize on the host so both execute() paths (and therefore
+    # Datastore.search) honor the declared np.ndarray contract
+    return EngineResult(
+        gids=np.asarray(g, np.int32),
+        distances=np.asarray(d, np.float32),
+        nodes_visited=(
+            np.asarray(visits, np.int32)
+            if visits is not None
+            else np.zeros(nq, np.int32)
+        )
+        if spec.return_visits
+        else None,
+    )
+
+
+def search_tree(tree, queries, spec: QuerySpec) -> sj.KnnResult:
+    """Static host tree through the same engine: padded to its shape
+    class and dispatched as an S=1 stacked batch, so a static tree and
+    a streaming segment of the same class share one compiled program."""
+    dtype = jnp.dtype(spec.dtype)
+    dt = shapes.pad_device_tree(sj.device_tree(tree, dtype))
+    stack_size = shapes.padded_stack_size(sj.max_depth(tree))
+    gids = shapes.pad_gids(jnp.arange(tree.n_points, dtype=jnp.int32))
+    cls = shapes.shape_class_of(dt, stack_size, int(gids.shape[0]))
+    q = jnp.asarray(np.asarray(queries).reshape(-1, cls.dim), dtype)
+    rb = jnp.broadcast_to(jnp.asarray(spec.radius, dtype), q.shape[:1])
+    stacked = sj.DeviceTree(*[x[None] for x in dt])
+    res = _dispatch_stacked(stacked, gids[None], q, rb, spec.k, stack_size, cls)
+    return sj.KnnResult(
+        indices=res.gids,
+        distances=res.distances,
+        nodes_visited=res.nodes_visited,
+    )

@@ -1,0 +1,104 @@
+"""The single on-device top-k merge used by every read path.
+
+Every search part (a ball*-tree traversal, a stacked shape-class batch,
+a delta-arena scan, a remote shard) reports its candidates as an
+ascending-sorted (distance, id) list. Merging two sorted lists does not
+need an argsort of the concatenation: the merged position of each
+element is its own rank plus its rank in the other list, which is a
+pair of broadcast comparisons and one scatter — O(ka·kb) branch-free
+ops instead of an O((ka+kb)·log) sort, and exactly the shape of work
+the VPU likes. `merge_parts` folds this pairwise merge over any number
+of parts (tree reduction, truncating to k between rounds, which
+preserves exactness: top-k of a union is the top-k of per-part top-ks).
+
+Stability: on ties, elements of the first argument win (and within one
+part, lower positions win) — the same order a stable argsort of the
+concatenation would produce, so this is a drop-in replacement for the
+concat+argsort idiom it retires.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_sorted(d: jax.Array, i: jax.Array, k: int):
+    """Ascending smallest-k of *unsorted* candidates along the last axis.
+
+    Returns arrays of width min(k, m). Ties pick the lower slot first
+    (lax.top_k is stable), matching a stable argsort.
+    """
+    m = d.shape[-1]
+    kk = min(k, m)
+    neg, pos = jax.lax.top_k(-d, kk)  # top_k sorts descending -> -d ascending
+    return -neg, jnp.take_along_axis(i, pos, axis=-1)
+
+
+def _scatter_last(out: jax.Array, pos: jax.Array, val: jax.Array) -> jax.Array:
+    """out[..., pos[..., j]] = val[..., j] with batched positions."""
+    m = out.shape[-1]
+    batch = int(np.prod(out.shape[:-1], dtype=np.int64)) if out.ndim > 1 else 1
+    flat = out.reshape(batch, m)
+    rows = jnp.arange(batch)[:, None]
+    flat = flat.at[rows, pos.reshape(batch, -1)].set(val.reshape(batch, -1))
+    return flat.reshape(out.shape)
+
+
+def merge_sorted(
+    da: jax.Array, ia: jax.Array, db: jax.Array, ib: jax.Array
+) -> Tuple[jax.Array, jax.Array]:
+    """Merge two ascending-sorted candidate lists along the last axis.
+
+    Positions come from cross-ranks, not a sort: element a[j] lands at
+    j + |{b < a[j]}| and b[j] at j + |{a <= b[j]}|; the <, <= split
+    makes the two position sets disjoint and the merge stable (a before
+    equal b). Works for any matching leading batch shape, including
+    rank-1 inputs inside a vmapped traversal.
+    """
+    ka, kb = da.shape[-1], db.shape[-1]
+    pos_a = jnp.arange(ka) + jnp.sum(
+        db[..., None, :] < da[..., :, None], axis=-1
+    )
+    pos_b = jnp.arange(kb) + jnp.sum(
+        da[..., None, :] <= db[..., :, None], axis=-1
+    )
+    shape = jnp.broadcast_shapes(da.shape[:-1], db.shape[:-1])
+    out_d = jnp.zeros(shape + (ka + kb,), da.dtype)
+    out_i = jnp.zeros(shape + (ka + kb,), ia.dtype)
+    out_d = _scatter_last(_scatter_last(out_d, pos_a, da), pos_b, db)
+    out_i = _scatter_last(_scatter_last(out_i, pos_a, ia), pos_b, ib)
+    return out_d, out_i
+
+
+def pad_to_k(d: jax.Array, i: jax.Array, k: int):
+    """Right-pad a sorted candidate list to width k with (+inf, -1)."""
+    m = d.shape[-1]
+    if m >= k:
+        return d[..., :k], i[..., :k]
+    pad = [(0, 0)] * (d.ndim - 1) + [(0, k - m)]
+    return (
+        jnp.pad(d, pad, constant_values=jnp.inf),
+        jnp.pad(i, pad, constant_values=-1),
+    )
+
+
+def merge_parts(
+    parts: Sequence[Tuple[jax.Array, jax.Array]], k: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Exact global top-k over per-part sorted k-bests (tree fold)."""
+    if not parts:
+        raise ValueError("merge_parts needs at least one part")
+    todo: List[Tuple[jax.Array, jax.Array]] = list(parts)
+    while len(todo) > 1:
+        nxt = []
+        for j in range(0, len(todo) - 1, 2):
+            d, i = merge_sorted(*todo[j], *todo[j + 1])
+            nxt.append((d[..., :k], i[..., :k]))
+        if len(todo) % 2:
+            nxt.append(todo[-1])
+        todo = nxt
+    return pad_to_k(*todo[0], k)

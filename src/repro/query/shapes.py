@@ -1,0 +1,98 @@
+"""Power-of-two shape classes for segment device arrays.
+
+The batched traversal is jit-compiled per array shape, so an LSM whose
+merges produce ever-new segment sizes recompiles forever (the old
+ROADMAP compile-cache instability). Rounding every shape axis that
+feeds the compile key — node count, leaf count, gid table, stack depth
+— up to a power of two buckets all segments into at most log2(N)
+*shape classes*: every segment in a class shares one compiled
+traversal, and all segments of a class are answered by one stacked
+vmap dispatch. Padding is correctness-free by construction: padded
+nodes are unreachable (no child pointer ever aims at them), padded
+leaf rows are never ranked, padded leaf slots carry index -1 (the
+existing tombstone/padding sentinel), and extra stack slots are simply
+never used.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import search_jax as sj
+
+
+def next_pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (int(n) - 1).bit_length()
+
+
+class ShapeClass(NamedTuple):
+    """Compile-relevant shape of one segment's device arrays."""
+
+    n_nodes: int     # pow2-padded node count
+    n_leaves: int    # pow2-padded leaf count
+    cap: int         # leaf capacity (fixed by the TreeSpec, not padded)
+    dim: int
+    stack_size: int  # pow2-padded DFS stack bound
+    n_gids: int      # pow2-padded gid-table length
+
+
+def shape_class_of(dtree, stack_size: int, n_gids: int) -> ShapeClass:
+    return ShapeClass(
+        n_nodes=int(dtree.center.shape[0]),
+        n_leaves=int(dtree.leaf_points.shape[0]),
+        cap=int(dtree.leaf_points.shape[1]),
+        dim=int(dtree.center.shape[1]),
+        stack_size=int(stack_size),
+        n_gids=int(n_gids),
+    )
+
+
+def padded_stack_size(depth: int) -> int:
+    """Pow2 bucket of the DFS stack bound (depth+2 plus one slack)."""
+    return next_pow2(depth + 3)
+
+
+def _pad_axis0(a, n: int, fill):
+    pad = [(0, n - a.shape[0])] + [(0, 0)] * (a.ndim - 1)
+    return jnp.pad(a, pad, constant_values=fill)
+
+
+def pad_device_tree(dt):
+    """Pad node/leaf axes to the next power of two (shape-class form)."""
+    n_nodes = next_pow2(int(dt.center.shape[0]))
+    n_leaves = next_pow2(int(dt.leaf_points.shape[0]))
+    return sj.DeviceTree(
+        center=_pad_axis0(dt.center, n_nodes, 0.0),
+        radius=_pad_axis0(dt.radius, n_nodes, 0.0),
+        child_l=_pad_axis0(dt.child_l, n_nodes, -1),
+        child_r=_pad_axis0(dt.child_r, n_nodes, -1),
+        leaf_of_node=_pad_axis0(dt.leaf_of_node, n_nodes, -1),
+        leaf_points=_pad_axis0(dt.leaf_points, n_leaves, 0.0),
+        leaf_index=_pad_axis0(dt.leaf_index, n_leaves, -1),
+    )
+
+
+def pad_gids(gids_dev) -> jnp.ndarray:
+    """Pad the local-id -> gid table to pow2 with -1 (never selected:
+    the traversal only reports leaf_index entries >= 0, all < n)."""
+    return _pad_axis0(gids_dev, next_pow2(int(gids_dev.shape[0])), -1)
+
+
+def dummy_member(cls: ShapeClass, dtype=jnp.float32):
+    """An all-dead member used to pad a stacked class batch to a pow2
+    segment count: its root is a leaf whose slots are all -1, so a
+    traversal pops exactly one node, finds no candidates, and stops.
+    Built on demand (not cached): its cost is a strict fraction of the
+    jnp.stack that consumes it, and caching would pin a dataset-sized
+    allocation per class for the process lifetime."""
+    dt = sj.DeviceTree(
+        center=jnp.zeros((cls.n_nodes, cls.dim), dtype),
+        radius=jnp.zeros((cls.n_nodes,), dtype),
+        child_l=jnp.full((cls.n_nodes,), -1, jnp.int32),
+        child_r=jnp.full((cls.n_nodes,), -1, jnp.int32),
+        leaf_of_node=jnp.full((cls.n_nodes,), -1, jnp.int32),
+        leaf_points=jnp.zeros((cls.n_leaves, cls.cap, cls.dim), dtype),
+        leaf_index=jnp.full((cls.n_leaves, cls.cap), -1, jnp.int32),
+    )
+    return dt, jnp.full((cls.n_gids,), -1, jnp.int32)

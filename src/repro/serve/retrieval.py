@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.core import TreeSpec
 from repro.index import StreamingConfig, StreamingIndex
+from repro.query import QuerySpec
 
 
 @dataclasses.dataclass
@@ -101,20 +102,28 @@ class Datastore:
         """Evict stored states by id (tombstoned now, purged at merge)."""
         return self.index.delete(gids)
 
+    def search(self, queries: np.ndarray, spec: QuerySpec):
+        """Constrained NN over the live key set — a thin adapter over
+        the unified query engine (one snapshot, one engine call)."""
+        from repro.query import engine as qengine
+
+        return qengine.execute(self.index.snapshot(), queries, spec)
+
     def lookup(self, queries: np.ndarray, k: int, r: float):
         """Constrained NN over the live datastore. Returns (token values
         (Q, k), distances (Q, k), valid mask)."""
-        res = self.index.constrained_knn(queries, k, r)
-        idx = res.gids
+        res = self.search(queries, QuerySpec(k=k, radius=r))
+        idx = np.asarray(res.gids, np.int64)
+        dist = np.asarray(res.distances, np.float32)
         # a gid at/past _n is a point whose token is not published yet (a
         # concurrent add between index publish and the values write):
         # treat it as a transient miss, never as another state's token
         valid = (idx >= 0) & (idx < self._n)
         if self._n == 0:  # empty store (e.g. bootstrap before first add)
-            return np.zeros(idx.shape, np.int32), res.distances, valid
+            return np.zeros(idx.shape, np.int32), dist, valid
         vals = self._values[np.clip(idx, 0, self._n - 1)]
         vals = np.where(valid, vals, 0)
-        return vals, res.distances, valid
+        return vals, dist, valid
 
 
 def knn_interpolate(
