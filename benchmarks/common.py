@@ -8,8 +8,10 @@ records both scales for the headline tables.
 """
 from __future__ import annotations
 
+import json
 import os
 import time
+from typing import List, Optional
 
 import numpy as np
 
@@ -52,6 +54,16 @@ def radius_for(pts: np.ndarray, frac: float = 0.05) -> float:
     return frac * diag
 
 
+def env_caps():
+    """(BENCH_N, BENCH_Q) when set in the environment, else (None, None).
+    Sections with their own hardcoded shapes (the kernel benches) cap
+    those shapes by these so the CI smoke leg never times full sizes."""
+    return (
+        int(os.environ["BENCH_N"]) if "BENCH_N" in os.environ else None,
+        int(os.environ["BENCH_Q"]) if "BENCH_Q" in os.environ else None,
+    )
+
+
 def timed(fn, *args, repeat: int = 1, **kw):
     t0 = time.perf_counter()
     for _ in range(repeat):
@@ -60,8 +72,50 @@ def timed(fn, *args, repeat: int = 1, **kw):
     return out, dt
 
 
-def emit(name: str, us_per_call: float, derived: str):
+# -- machine-readable bench artifacts ----------------------------------------
+# `emit` keeps printing the human CSV line AND records every datapoint;
+# run.py (or a standalone section __main__) flushes the records of each
+# section to BENCH_<section>.json so the perf trajectory persists
+# across runs instead of dying in CI logs.
+_RECORDS: List[dict] = []
+
+
+def emit(name: str, us_per_call: float, derived: str, unit: str = "us_per_call"):
     print(f"{name},{us_per_call:.2f},{derived}")
+    _RECORDS.append(
+        {
+            "name": name,
+            "value": float(us_per_call),
+            "unit": unit,
+            "metadata": derived,
+        }
+    )
+
+
+def reset_records() -> None:
+    _RECORDS.clear()
+
+
+def write_bench_json(section: str, out_dir: Optional[str] = None) -> str:
+    """Flush the records emitted since the last reset to
+    ``<out_dir>/BENCH_<section>.json`` (out_dir: $BENCH_OUT or
+    ``bench_out``). Returns the path written."""
+    out_dir = out_dir or os.environ.get("BENCH_OUT", "bench_out")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{section}.json")
+    payload = {
+        "section": section,
+        "generated_unix": time.time(),
+        "env": {
+            k: os.environ[k]
+            for k in ("BENCH_N", "BENCH_Q", "JAX_PLATFORMS")
+            if k in os.environ
+        },
+        "records": list(_RECORDS),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
 
 
 def build_timed(pts, algo: str):
@@ -75,10 +129,13 @@ __all__ = [
     "SYNTHETIC",
     "SPECS",
     "sizes",
+    "env_caps",
     "dataset",
     "queries_for",
     "radius_for",
     "timed",
     "emit",
+    "reset_records",
+    "write_bench_json",
     "build_timed",
 ]

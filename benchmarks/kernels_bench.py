@@ -1,8 +1,21 @@
-"""Kernel microbenchmarks + analytic TPU roofline for the two Pallas
+"""Kernel microbenchmarks + analytic TPU roofline for the Pallas
 kernels. On CPU the kernels execute in interpret mode (Python), so
 wall-clock here measures the jnp oracle (what XLA:CPU runs); the TPU
-numbers are analytic roofline terms from the kernel's exact FLOP/byte
-counts (v5e: 197 TFLOP/s bf16, 819 GB/s HBM)."""
+numbers are analytic roofline terms from each kernel's exact FLOP/byte
+counts (v5e: 197 TFLOP/s bf16, 819 GB/s HBM).
+
+The headline comparison is fused vs unfused top-k: the unfused path
+(pairwise kernel + row argsort) writes the (Q, N) distance matrix to
+HBM and reads it back to sort, so its memory time scales with Q·N; the
+fused kernel (`topk_l2.py`) streams `p` once and emits only (Q, k), so
+its memory time is the irreducible input read. Both paths run the same
+MXU matmul, which is why the fused kernel flips from memory- to
+compute-bound once Q·N dwarfs the input — exactly the regime where the
+unfused path is stuck on the writeback.
+
+Shapes are capped by the BENCH_N / BENCH_Q env overrides (CI smoke leg)
+like every other section.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -10,16 +23,32 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref
+from repro.kernels.topk_l2 import _next_pow2
 
-from .common import emit, timed
+from .common import emit, env_caps, timed, write_bench_json
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 
 
+def _capped(m: int, n: int):
+    n_cap, q_cap = env_caps()
+    return (min(m, q_cap) if q_cap else m, min(n, n_cap) if n_cap else n)
+
+
+def _selection_stages(kp: int, bn: int) -> int:
+    """Compare-exchange stages per (bm, bn) block of the fused kernel:
+    chunk sort + tournament rounds + the carried 2kp merge."""
+    lk, lb = int(np.log2(kp)), int(np.log2(bn))
+    chunk_sort = lk * (lk + 1) // 2
+    tournament = (lb - lk) * (1 + lk)
+    carried = lk + 1
+    return chunk_sort + tournament + carried
+
+
 def run(full: bool = False):
     rng = np.random.default_rng(0)
-    shapes = [(512, 2048, 64), (1024, 4096, 128)]
+    shapes = [_capped(512, 2048) + (64,), _capped(1024, 4096) + (128,)]
     for m, n, d in shapes:
         q = jnp.asarray(rng.standard_normal((m, d)), jnp.bfloat16)
         p = jnp.asarray(rng.standard_normal((n, d)), jnp.bfloat16)
@@ -38,7 +67,48 @@ def run(full: bool = False):
             f"tpu_memory_us={t_mem * 1e6:.1f};"
             f"bound={'compute' if t_comp > t_mem else 'memory'}",
         )
+    # ---- fused streaming top-k vs the unfused materialize+argsort path ----
+    for m, n, d in shapes:
+        q = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+        p = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+        gids = np.arange(n, dtype=np.int32)
+        gids[::13] = -1  # some dead slots so the liveness gate is live
+        g = jnp.asarray(gids)
+        for k in (8, 64):
+            kp, bn = _next_pow2(k), max(_next_pow2(k), 128)
+            # unfused wall time (XLA:CPU oracle): materialize + argsort
+            fn = lambda: ref.topk_l2(q, p, g, np.inf, k)[0].block_until_ready()
+            fn()
+            _, dt = timed(fn, repeat=3)
+            # HBM traffic: both paths read q, p, gids and write (Q, k);
+            # the unfused path additionally writes the (Q, N) matrix and
+            # reads it back for the row sort
+            bytes_io = (m * d + n * d) * 4 + n * 4 + m * kp * 12
+            bytes_unfused = bytes_io + 2 * m * n * 4
+            bytes_fused = bytes_io
+            # FLOPs: shared MXU matmul + the fused kernel's VPU
+            # selection network (~8 elementary ops per lane per stage)
+            flops_mm = 2 * m * n * d + 2 * (m + n) * d
+            flops_sel = 8 * m * n * _selection_stages(kp, bn)
+            t_mem_f = bytes_fused / HBM_BW
+            t_mem_u = bytes_unfused / HBM_BW
+            t_comp_f = (flops_mm + flops_sel) / PEAK_FLOPS
+            emit(
+                f"kernel/topk_l2/{m}x{n}x{d}/k={k}",
+                dt * 1e6,
+                "cpu_unfused_ref_us;"
+                f"tpu_fused_mem_us={t_mem_f * 1e6:.1f};"
+                f"tpu_fused_compute_us={t_comp_f * 1e6:.1f};"
+                f"tpu_unfused_mem_us={t_mem_u * 1e6:.1f};"
+                f"hbm_bytes_fused={bytes_fused};"
+                f"hbm_bytes_unfused={bytes_unfused};"
+                f"hbm_reduction={bytes_unfused / bytes_fused:.1f}x;"
+                f"fused_bound="
+                f"{'compute' if t_comp_f > t_mem_f else 'memory'};"
+                "unfused_bound=memory",
+            )
     for n, d in [(200_000, 2), (100_000, 64)]:
+        _, n = _capped(0, n)
         x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
         mean = x.mean(0)
         w = jnp.asarray(rng.standard_normal(d), jnp.float32)
@@ -53,14 +123,24 @@ def run(full: bool = False):
             f"cpu_ref_us;tpu_memory_us={bytes_ / HBM_BW * 1e6:.1f};"
             f"ai={flops / bytes_:.2f}flops_per_byte;bound=memory",
         )
-    # interpret-mode correctness spot check rides along
+    # interpret-mode correctness spot checks ride along: the REAL Pallas
+    # programs (pairwise + fused top-k) vs their oracles
     q = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)
     p = jnp.asarray(rng.standard_normal((96, 32)), jnp.float32)
     np.testing.assert_allclose(
         ops.pairwise_sq_l2(q, p), ref.pairwise_sq_l2(q, p), rtol=1e-4, atol=1e-4
     )
     emit("kernel/interpret_check", 0.0, "allclose_ok")
+    g = jnp.asarray(
+        np.where(rng.random(96) < 0.2, -1, np.arange(96)), jnp.int32
+    )
+    fd, fi = ops.topk_l2(q, p, g, 5.0, 8)
+    rd, ri = ref.topk_l2(q, p, g, 5.0, 8)
+    np.testing.assert_array_equal(np.asarray(fi), np.asarray(ri))
+    np.testing.assert_allclose(fd, rd, rtol=1e-5, atol=1e-6)
+    emit("kernel/topk_interpret_check", 0.0, "bit_identical_order_ok")
 
 
 if __name__ == "__main__":
     run()
+    write_bench_json("kernels")

@@ -1,4 +1,7 @@
-# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+# One function per paper table. Print ``name,us_per_call,derived`` CSV
+# and persist each section's datapoints to BENCH_<section>.json (under
+# $BENCH_OUT, default ./bench_out) so the perf trajectory survives the
+# run — CI uploads these as artifacts.
 from __future__ import annotations
 
 import argparse
@@ -42,16 +45,22 @@ def main() -> None:
         "roofline": roofline_report.run,         # dry-run roofline table
         "streaming": streaming.run,              # LSM mixed read/write
     }
+    from . import common
+
     chosen = args.only.split(",") if args.only else list(sections)
     print("name,us_per_call,derived")
     t0 = time.time()
     failed = []
     for name in chosen:
+        common.reset_records()
         try:
             sections[name](full=args.full)
         except Exception as e:  # keep the harness running; report failure
             print(f"{name},0.00,ERROR:{type(e).__name__}:{e}", file=sys.stdout)
             failed.append(name)
+        else:
+            path = common.write_bench_json(name)
+            print(f"{name},0.00,json={path}")
     print(f"total,{(time.time() - t0) * 1e6:.0f},bench_wall_time")
     if failed:  # nonzero exit so the CI benchmark-smoke leg catches drift
         sys.exit(f"benchmark sections failed: {','.join(failed)}")

@@ -168,3 +168,51 @@ def constrained_knn(
 
     dist, idx = search(index.stacked, q, offsets)
     return np.asarray(idx), np.asarray(dist)
+
+
+def brute_constrained_knn(
+    points: np.ndarray,   # (N, d) — sharded over `axis`
+    mesh: Mesh,
+    queries: np.ndarray,  # (Q, d) — replicated
+    k: int,
+    r: float,
+    axis: str = "data",
+):
+    """Distributed brute-force baseline: no tree at all. Each shard
+    streams its point slice once through the fused top-k kernel
+    (`search_jax.brute_topk`) and the global K-best is the same
+    all_gather + sorted-merge epilogue as the tree path. This is the
+    referent the sharded index's speedup is measured against; its HBM
+    cost per shard is one read of the slice plus O(Q·k) — the (Q, N)
+    distance matrix of the old brute path never exists.
+
+    Returns (global indices (Q, k), distances (Q, k))."""
+    n_shards = dict(zip(mesh.axis_names, mesh.devices.shape))[axis]
+    n = points.shape[0]
+    per = (n + n_shards - 1) // n_shards
+    npad = per * n_shards
+    # pad the point set to an even split; padded slots carry gid -1 so
+    # the in-kernel liveness mask drops them
+    pts = np.zeros((npad, points.shape[1]), np.float32)
+    pts[:n] = points
+    gids = np.full(npad, -1, np.int32)
+    gids[:n] = np.arange(n, dtype=np.int32)
+    q = jnp.asarray(queries, jnp.float32)
+
+    @partial(
+        _shard_map,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P()),
+        out_specs=(P(), P()),
+        **_SHARD_MAP_KW,
+    )
+    def scan(p_local, g_local, qs):
+        res = sj.brute_topk(p_local, qs, k, r, gids=g_local)
+        all_d = jax.lax.all_gather(res.distances, axis)
+        all_i = jax.lax.all_gather(res.indices, axis)
+        return qmerge.merge_parts(
+            [(all_d[s], all_i[s]) for s in range(n_shards)], k
+        )
+
+    dist, idx = scan(jnp.asarray(pts), jnp.asarray(gids), q)
+    return np.asarray(idx), np.asarray(dist)

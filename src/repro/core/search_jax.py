@@ -210,6 +210,37 @@ def constrained_knn_stacked(
     return StackedResult(gids=g, distances=d, nodes_visited=v.sum(0))
 
 
+def brute_topk(
+    points: jax.Array,    # (N, d)
+    queries: jax.Array,   # (Q, d)
+    k: int,
+    r=jnp.inf,            # scalar or (Q,) euclidean radius
+    gids: jax.Array | None = None,  # (N,) ids; default arange(N)
+) -> KnnResult:
+    """Exact constrained-KNN with NO tree: one fused streaming scan of
+    `points` (`kernels/topk_l2.py`). This is the brute referent every
+    traversal is validated/benchmarked against, and the per-shard leg
+    of the distributed brute baseline — it never materializes a (Q, N)
+    distance matrix, so its HBM cost is a single read of `points` plus
+    the (Q, k) answer. Results follow the `query/merge` sorted
+    convention ((+inf, -1) padding, ties to the lower slot)."""
+    from repro.kernels import ops
+
+    p = jnp.asarray(points, jnp.float32)
+    q = jnp.asarray(queries, jnp.float32).reshape(-1, p.shape[1])
+    g = (
+        jnp.arange(p.shape[0], dtype=jnp.int32)
+        if gids is None
+        else jnp.asarray(gids, jnp.int32)
+    )
+    d, i = ops.topk_l2(q, p, g, r, k)
+    return KnnResult(
+        indices=i,
+        distances=d,
+        nodes_visited=jnp.zeros(q.shape[0], jnp.int32),
+    )
+
+
 def search(
     tree: Tree,
     queries: np.ndarray,

@@ -6,8 +6,8 @@ not — points arrive and expire under traffic. This subsystem makes the
 ball*-tree mutable without giving up exactness, using the log-structured
 merge decomposition:
 
-    writes ──> delta arena (device, fixed capacity, exhaustive Pallas
-               pairwise search)
+    writes ──> delta arena (device, fixed capacity, exhaustive fused
+               streaming top-k search)
         seal ──> immutable ball*-tree segment (level-synchronous
                  `build_jax` build)
             merge ──> geometric size-tiered compaction (rebuild, purge

@@ -4,11 +4,15 @@ A fixed-capacity (capacity, d) array lives on device; `append` writes new
 points into the next free slots and `tombstone` marks slots dead by
 setting their global id to -1. Because the buffer is small (one leaf-ish
 sized arena, typically 1k-8k points) it is searched *exhaustively* with
-the Pallas blocked pairwise-L2 kernel — the same MXU-friendly
-``q² + p² - 2qp`` form used by every other hot path — so delta search is
-one matmul-shaped kernel launch, not a traversal. Dead and never-filled
-slots simply read +inf distance, which keeps the search branch-free and
-the buffer shape static (one compiled program per capacity).
+the fused streaming top-k kernel (`kernels/topk_l2.py`): the same
+MXU-friendly ``q² + p² - 2qp`` distance blocks as every other hot path,
+but the per-query k-best is selected *inside* the kernel (the gid
+liveness mask and radius gate included), so delta search is one kernel
+launch that streams the arena once and emits only the (Q, k) sorted
+answer — no (Q, capacity) distance matrix, no row argsort, no
+host-side selection. Dead and never-filled slots are masked to +inf
+in-kernel, which keeps the search branch-free and the buffer shape
+static (one compiled program per capacity).
 
 All updates are functional (`jax.Array.at[...]`), so a `Snapshot` taken
 before a mutation keeps seeing its own consistent arrays for free.
@@ -90,25 +94,15 @@ class DeltaBuffer:
 
 
 def search(points: jax.Array, gids: jax.Array, queries: jax.Array, k: int, r):
-    """Exact constrained-KNN over the delta arena via the pairwise kernel.
+    """Exact constrained-KNN over the delta arena via the fused top-k
+    kernel: one streaming scan of the arena, selection in-kernel.
 
-    Returns (distances (Q, k), gids (Q, k)) with +inf / -1 where fewer
-    than k live points fall within radius r of the query.
+    Returns (distances (Q, k), gids (Q, k)) ascending-sorted in the
+    `query/merge` convention (ties to the lower arena slot, the order a
+    stable argsort would give), with +inf / -1 where fewer than k live
+    points fall within radius r — including when the arena itself holds
+    fewer than k slots, so the caller always sees its requested shape.
     """
     q = jnp.asarray(queries, jnp.float32)
     rb = jnp.broadcast_to(jnp.asarray(r, jnp.float32), q.shape[:1])
-    d = ops.pairwise_l2(q, points)  # (Q, capacity)
-    ok = (gids >= 0)[None, :] & (d <= rb[:, None])
-    d = jnp.where(ok, d, jnp.inf)
-    kk = min(k, int(points.shape[0]))
-    order = jnp.argsort(d, axis=1)[:, :kk]
-    dd = jnp.take_along_axis(d, order, axis=1)
-    gg = jnp.take_along_axis(
-        jnp.broadcast_to(gids[None, :], d.shape), order, axis=1
-    )
-    gg = jnp.where(jnp.isinf(dd), -1, gg)
-    if kk < k:  # arena smaller than k: pad to the caller's shape
-        pad = ((0, 0), (0, k - kk))
-        dd = jnp.pad(dd, pad, constant_values=jnp.inf)
-        gg = jnp.pad(gg, pad, constant_values=-1)
-    return dd, gg
+    return ops.topk_l2(q, points, gids, rb, k)

@@ -2,7 +2,7 @@
 
 The engine (`repro.query.engine`) groups the snapshot's segments by
 pow2 shape class, answers each class in ONE stacked jit dispatch, scans
-the delta arena with the Pallas pairwise kernel, and folds everything
+the delta arena with the fused streaming top-k kernel, and folds everything
 with the single on-device sorted-merge primitive (`repro.query.merge`)
 — exact for the usual reason: every live point belongs to exactly one
 part, each part's k-best is exact over its own points, and the union of

@@ -11,6 +11,7 @@ import jax.numpy as jnp
 
 from . import pairwise_l2 as _pw
 from . import cov_matvec as _cm
+from . import topk_l2 as _tk
 
 
 def _interpret() -> bool:
@@ -26,6 +27,13 @@ def pairwise_sq_l2(q, p, **kw):
 def pairwise_l2(q, p, **kw):
     """Euclidean distance matrix (M, N) f32."""
     return jnp.sqrt(pairwise_sq_l2(q, p, **kw))
+
+
+def topk_l2(q, p, gids, r, k, **kw):
+    """Fused streaming constrained top-k: (Q, k) ascending (dist, gid)
+    without ever materializing the (Q, N) distance matrix."""
+    kw.setdefault("interpret", _interpret())
+    return _tk.topk_l2(q, p, gids, r, k, **kw)
 
 
 def lower_bounds(q, centers, radii, **kw):

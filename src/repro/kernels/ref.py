@@ -15,6 +15,38 @@ def pairwise_sq_l2(q: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
     return (diff * diff).sum(-1)
 
 
+def topk_l2(q, p, gids, r, k: int):
+    """Constrained top-k oracle: the UNFUSED path the kernel replaces —
+    materialize the full (Q, N) distance matrix, mask, stable-argsort
+    every row, slice k. Exact reference for ordering (ties resolve to
+    the lower slot, the `query/merge` convention) and for the
+    fused-vs-unfused benchmark comparison.
+
+    q: (Q, D), p: (N, D), gids: (N,) i32 (-1 dead), r scalar/(Q,).
+    Returns ascending (distances (Q, k) f32, ids (Q, k) i32) padded
+    with (+inf, -1).
+    """
+    q = jnp.asarray(q, jnp.float32)
+    rb = jnp.broadcast_to(jnp.asarray(r, jnp.float32), q.shape[:1])
+    d = jnp.sqrt(pairwise_sq_l2(q, p))  # (Q, N) materialized
+    ok = (jnp.asarray(gids) >= 0)[None, :] & (d <= rb[:, None])
+    d = jnp.where(ok, d, jnp.inf)
+    kk = min(k, int(p.shape[0]))
+    order = jnp.argsort(d, axis=1)[:, :kk]
+    dd = jnp.take_along_axis(d, order, axis=1)
+    gg = jnp.take_along_axis(
+        jnp.broadcast_to(jnp.asarray(gids, jnp.int32)[None, :], d.shape),
+        order,
+        axis=1,
+    )
+    gg = jnp.where(jnp.isinf(dd), -1, gg)
+    if kk < k:
+        pad = ((0, 0), (0, k - kk))
+        dd = jnp.pad(dd, pad, constant_values=jnp.inf)
+        gg = jnp.pad(gg, pad, constant_values=-1)
+    return dd, gg
+
+
 def cov_matvec(x: jnp.ndarray, mean: jnp.ndarray, w: jnp.ndarray):
     """One centered-covariance power-iteration step: y = Xcᵀ (Xc w).
 

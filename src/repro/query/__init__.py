@@ -4,7 +4,8 @@
               (`shapes.py`) — bounded jit cache, stable across merges
     traverse: one stacked vmap dispatch per class
               (`core/search_jax.constrained_knn_stacked`); the delta
-              arena joins as a degenerate class (Pallas pairwise scan)
+              arena joins as a degenerate class (fused streaming
+              top-k kernel, selection in-kernel)
     merge:    one on-device sorted-merge primitive (`merge.py`) folds
               the per-part k-bests — no argsort of the concatenation
 

@@ -11,8 +11,10 @@ Planner: a snapshot's segments are grouped by their power-of-two
 *shape class* (`query/shapes.py`); all S segments of one class are
 answered by a single `constrained_knn_stacked` jit dispatch over a
 (S_pow2, …)-stacked DeviceTree batch (padded with an all-dead dummy
-member), and the delta arena joins as a degenerate class via the
-Pallas pairwise kernel. The per-part sorted k-bests are folded with
+member), and the delta arena joins as a degenerate class via the fused
+streaming top-k kernel (`kernels/topk_l2.py`) — its (Q, k) output is
+already in `query/merge` sorted form, so it folds straight into the
+snapshot merge. The per-part sorted k-bests are folded with
 `query/merge.py` on device. So a mixed segments∪delta query costs
 O(#classes) dispatches — O(1) per class, not O(#segments) — and the
 jit cache is keyed on shape classes, not on every novel merge size.
@@ -89,7 +91,10 @@ class ClassGroup(NamedTuple):
 
 def plan(snapshot) -> List[ClassGroup]:
     """Group a snapshot's live segments by shape class (token-sorted
-    within a class so the stacked-batch cache key is stable)."""
+    within a class so iteration — and any from-scratch stacked build —
+    is deterministic; the stacked-batch cache keys on the token SET,
+    since an incremental refresh may place a replacement segment in its
+    predecessor's slot rather than in token order)."""
     groups = {}
     for view in snapshot.segments:
         if view.n_live == 0:  # fully tombstoned: nothing to dispatch
@@ -105,48 +110,130 @@ def plan(snapshot) -> List[ClassGroup]:
 
 
 # -- stacked-batch cache -----------------------------------------------------
-# LRU keyed on (class, member tokens). Segments are always f32 (sealed
-# by Segment.from_points), so dtype is not part of the key. Per class
-# at most TWO batches are retained — the current one plus the most
-# recently used predecessor, which an MVCC reader holding an older
+# LRU keyed on (class, member-token set). Segments are always f32
+# (sealed by Segment.from_points), so dtype is not part of the key. Per
+# class at most TWO batches are retained — the current one plus the
+# most recently used predecessor, which an MVCC reader holding an older
 # snapshot may still be alternating with; older superseded batches are
 # evicted eagerly so mutations cannot pin a pile of near-identical
 # class-sized device copies. Guarded by a lock: snapshots promise
 # torn-free concurrent readers, and those readers share this dict.
+#
+# Refresh is INCREMENTAL when membership barely changes: a tombstone
+# replaces one segment's token, so instead of re-stacking the whole
+# class batch (O(class) host restack + device upload) the predecessor
+# batch is patched with an `.at[s].set` of just the changed member —
+# O(segment) work. Slot assignment is therefore history-dependent (a
+# replacement lands in its predecessor's slot); the merge over stacked
+# slots is order-exact on distances, so results are unaffected.
 _STACK_CACHE: "collections.OrderedDict" = collections.OrderedDict()
 _STACK_CACHE_MAX = 8
 _STACK_LOCK = threading.Lock()
+_STACK_FULL_BUILDS = 0   # whole-class jnp.stack builds
+_STACK_INCR_UPDATES = 0  # O(segment) .at[s].set patches
+
+
+class _StackEntry(NamedTuple):
+    stacked: sj.DeviceTree  # (S_pow2, …) batch, dummy-padded
+    gids: jnp.ndarray       # (S_pow2, n) gid table
+    slot_tokens: tuple      # token occupying each real (non-dummy) slot
+
+
+def stack_stats() -> dict:
+    """Counters for the stacked-batch cache: how many refreshes rebuilt
+    a whole class batch vs patched a single member slot."""
+    return {
+        "full_builds": _STACK_FULL_BUILDS,
+        "incremental_updates": _STACK_INCR_UPDATES,
+    }
+
+
+def _incremental_update(
+    base: _StackEntry, group: ClassGroup
+) -> Optional[_StackEntry]:
+    """Patch `base` into the batch for `group` by replacing only the
+    members whose token changed. Applicable when the member count is
+    unchanged and at least one slot survives (else a full restack does
+    the same work). Returns None when not applicable."""
+    if len(base.slot_tokens) != len(group.views):
+        return None
+    old = set(base.slot_tokens)
+    fresh = [v for v in group.views if v.token not in old]
+    if not fresh or len(fresh) == len(group.views):
+        return None  # identical (cache hit upstream) or all-new
+    new_tokens = {v.token for v in group.views}
+    free = [i for i, t in enumerate(base.slot_tokens) if t not in new_tokens]
+    if len(free) != len(fresh):
+        return None
+    stacked, gids = base.stacked, base.gids
+    slot_tokens = list(base.slot_tokens)
+    for s, view in zip(free, fresh):
+        stacked = sj.DeviceTree(
+            *[
+                getattr(stacked, f).at[s].set(getattr(view.dtree, f))
+                for f in sj.DeviceTree._fields
+            ]
+        )
+        gids = gids.at[s].set(view.gids_dev)
+        slot_tokens[s] = view.token
+    return _StackEntry(stacked, gids, tuple(slot_tokens))
 
 
 def _stacked_views(group: ClassGroup) -> Tuple[sj.DeviceTree, jnp.ndarray]:
     """(S_pow2, …)-stacked DeviceTree + gid table for one shape class,
     memoized on the member segments' content tokens."""
-    key = (group.cls, tuple(v.token for v in group.views))
+    global _STACK_FULL_BUILDS, _STACK_INCR_UPDATES
+    key = (group.cls, frozenset(v.token for v in group.views))
     with _STACK_LOCK:
         hit = _STACK_CACHE.get(key)
         if hit is not None:
             _STACK_CACHE.move_to_end(key)
-            return hit
+            return hit.stacked, hit.gids
+        # most recent predecessor batch of this class, if any
+        base = next(
+            (
+                _STACK_CACHE[s]
+                for s in reversed(_STACK_CACHE)
+                if s[0] == group.cls
+            ),
+            None,
+        )
     # build outside the lock (two racing builders produce identical
     # content; last insert wins)
-    dummy_dt, dummy_g = shapes.dummy_member(group.cls, jnp.float32)
-    n_pad = shapes.next_pow2(len(group.views)) - len(group.views)
-    trees = [v.dtree for v in group.views] + [dummy_dt] * n_pad
-    stacked = sj.DeviceTree(
-        *[
-            jnp.stack([getattr(t, f) for t in trees])
-            for f in sj.DeviceTree._fields
-        ]
-    )
-    gids = jnp.stack([v.gids_dev for v in group.views] + [dummy_g] * n_pad)
+    entry = _incremental_update(base, group) if base is not None else None
+    incremental = entry is not None
+    if entry is None:
+        dummy_dt, dummy_g = shapes.dummy_member(group.cls, jnp.float32)
+        n_pad = shapes.next_pow2(len(group.views)) - len(group.views)
+        # token-sorted slots so a from-scratch build is deterministic
+        views = sorted(group.views, key=lambda v: v.token)
+        trees = [v.dtree for v in views] + [dummy_dt] * n_pad
+        entry = _StackEntry(
+            stacked=sj.DeviceTree(
+                *[
+                    jnp.stack([getattr(t, f) for t in trees])
+                    for f in sj.DeviceTree._fields
+                ]
+            ),
+            gids=jnp.stack(
+                [v.gids_dev for v in views] + [dummy_g] * n_pad
+            ),
+            slot_tokens=tuple(v.token for v in views),
+        )
     with _STACK_LOCK:
+        # counters inside the lock: racing cache-missers must not lose
+        # increments (stack_stats feeds exact-count test assertions)
+        if incremental:
+            _STACK_INCR_UPDATES += 1
+        else:
+            _STACK_FULL_BUILDS += 1
         same = [s for s in _STACK_CACHE if s[0] == group.cls]
         for stale in same[:-1]:  # keep only the most recent predecessor
             del _STACK_CACHE[stale]
-        _STACK_CACHE[key] = (stacked, gids)
+        _STACK_CACHE[key] = entry
         while len(_STACK_CACHE) > _STACK_CACHE_MAX:
             _STACK_CACHE.popitem(last=False)
-    return stacked, gids
+    return entry.stacked, entry.gids
 
 
 def _dispatch_stacked(stacked, gids, q, rb, k: int, stack_size: int, cls):
@@ -207,6 +294,9 @@ def execute(snapshot, queries, spec: QuerySpec) -> EngineResult:
         from repro.index import delta as delta_mod
 
         _DISPATCHES += 1
+        # degenerate-class dispatch: the fused kernel streams the arena
+        # once, selects in-kernel, and returns (Q, k) already in the
+        # sorted-merge convention — no reshaping before the fold
         dd, dg = delta_mod.search(
             snapshot.delta_points, snapshot.delta_gids, q, k, rb
         )

@@ -29,6 +29,20 @@ def test_sharded_constrained_knn_exact():
             np.testing.assert_allclose(
                 dist[i][: len(bd)], bd, rtol=1e-4, atol=1e-5
             )
+        # distributed brute baseline: per-shard fused streaming top-k
+        # (search_jax.brute_topk), no tree — must be exact too (note the
+        # point count is NOT a multiple of the shard count, so the
+        # padded slots' gid -1 liveness mask is exercised)
+        bidx, bdist = distributed.brute_constrained_knn(
+            pts[:3998], mesh, queries, k, r
+        )
+        for i in range(32):
+            bi, bd = brute.constrained_knn(pts[:3998], queries[i], k, r)
+            got = bidx[i][bidx[i] >= 0]
+            assert np.array_equal(np.sort(got), np.sort(bi)), (i, got, bi)
+            np.testing.assert_allclose(
+                bdist[i][: len(bd)], bd, rtol=1e-4, atol=1e-5
+            )
         print("SHARDED_OK")
         """
     )

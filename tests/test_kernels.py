@@ -5,6 +5,14 @@ import pytest
 
 import jax.numpy as jnp
 
+try:  # hypothesis is optional: fall back to fixed deterministic cases
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.core import brute
 from repro.kernels import ops, ref
 
 SHAPES_PW = [
@@ -60,6 +68,160 @@ def test_cov_matvec(n, d, dtype):
     np.testing.assert_allclose(
         got, want, rtol=tol, atol=tol * max(1.0, float(jnp.abs(want).max()))
     )
+
+
+# -- fused streaming top-k ---------------------------------------------------
+def _check_topk_l2(seed, m, n, d, k, finite_r, dead_frac, quantize):
+    """Fused kernel == brute.constrained_knn over the live set, and
+    BIT-IDENTICAL ordering to the stable-argsort / `query/merge`
+    convention (ties to the lower slot) — including dead-slot masks,
+    finite radii, N < k, and non-block-multiple shapes."""
+    rng = np.random.default_rng(seed)
+    pts = rng.standard_normal((n, d)).astype(np.float32)
+    if quantize:  # force distance ties so ordering is actually exercised
+        pts = np.round(pts)
+    q = rng.standard_normal((m, d)).astype(np.float32)
+    if quantize:
+        q = np.round(q)
+    gids = np.arange(n, dtype=np.int32)
+    if dead_frac:
+        dead = rng.random(n) < dead_frac
+        gids[dead] = -1
+    if finite_r:
+        # keep r away from any actual distance: the kernel gates in f32
+        # while the numpy oracle compares in f64, and a point sitting
+        # exactly on the radius boundary would make the comparison
+        # depend on epsilon instead of on the kernel's contract
+        r = float(rng.uniform(0.5, 3.0))
+        all_d = np.sqrt(((q[:, None] - pts[None]) ** 2).sum(-1))
+        while np.any(np.abs(all_d - r) < 1e-4):
+            r += 3e-4
+    else:
+        r = np.inf
+    got_d, got_g = ops.topk_l2(q, pts, jnp.asarray(gids), r, k)
+    got_d, got_g = np.asarray(got_d), np.asarray(got_g)
+    assert got_d.shape == (m, k) and got_g.shape == (m, k)
+    # rows ascending-sorted (the merge-convention invariant); +inf
+    # padding pairs are equal-rank (inf - inf is NaN, not a violation)
+    d1, d2 = got_d[:, :-1], got_d[:, 1:]
+    assert np.all((d1 <= d2) | (np.isinf(d1) & np.isinf(d2)))
+    ref_d, ref_g = ref.topk_l2(q, pts, jnp.asarray(gids), r, k)
+    if quantize:
+        # integer coordinates: both distance formulations are exact, so
+        # the ordering oracle (unfused stable argsort, ties to the
+        # lower slot) must match BIT-IDENTICALLY even across ties
+        assert np.array_equal(got_g, np.asarray(ref_g)), (seed, m, n, d, k)
+        assert np.array_equal(got_d, np.asarray(ref_d))
+    else:
+        np.testing.assert_allclose(got_d, ref_d, rtol=1e-5, atol=1e-5)
+    # value oracle: brute force over the live subset only
+    live = gids >= 0
+    live_pts, live_ids = pts[live], np.nonzero(live)[0]
+    for i in range(m):
+        if live_pts.shape[0]:
+            bi, bd = brute.constrained_knn(live_pts, q[i], k, r)
+            want_g = live_ids[bi]
+        else:
+            want_g, bd = np.zeros(0, np.int64), np.zeros(0)
+        row = got_g[i][got_g[i] >= 0]
+        assert set(row.tolist()) == set(want_g.tolist()), (seed, i)
+        np.testing.assert_allclose(
+            got_d[i][: len(bd)], bd, rtol=1e-4, atol=1e-5
+        )
+        assert np.isinf(got_d[i][len(bd):]).all()
+        assert (got_g[i][len(bd):] == -1).all()
+
+
+_TOPK_CASES = [
+    # seed, m, n, d, k, finite_r, dead_frac, quantize
+    (0, 5, 40, 8, 8, False, 0.0, False),
+    (1, 17, 300, 20, 8, True, 0.3, False),
+    (2, 3, 3, 2, 8, False, 0.0, False),     # N < k
+    (3, 8, 64, 3, 1, True, 0.2, False),     # k = 1
+    (4, 33, 257, 5, 64, False, 0.1, False),  # k = 64, non-multiples
+    (5, 9, 130, 2, 8, True, 0.0, True),      # ties via quantization
+    (6, 4, 50, 3, 8, False, 1.0, False),     # all-dead arena
+    (7, 2, 1, 1, 3, False, 0.0, False),      # single point, D=1
+]
+
+if HAVE_HYPOTHESIS:
+    test_topk_l2_property = settings(max_examples=25, deadline=None)(
+        given(
+            seed=st.integers(0, 10_000),
+            m=st.integers(1, 20),
+            n=st.integers(1, 150),
+            d=st.integers(1, 24),
+            k=st.sampled_from([1, 8, 64]),
+            finite_r=st.booleans(),
+            dead_frac=st.sampled_from([0.0, 0.3, 1.0]),
+            quantize=st.booleans(),
+        )(_check_topk_l2)
+    )
+else:
+
+    @pytest.mark.parametrize(
+        "seed,m,n,d,k,finite_r,dead_frac,quantize", _TOPK_CASES
+    )
+    def test_topk_l2_fallback(seed, m, n, d, k, finite_r, dead_frac, quantize):
+        _check_topk_l2(seed, m, n, d, k, finite_r, dead_frac, quantize)
+
+
+def test_topk_l2_merge_convention_ties():
+    """Duplicate points (exact ties): the fused kernel must report the
+    lower arena slot first — the order `query/merge.merge_sorted` and a
+    stable argsort agree on."""
+    pts = np.zeros((10, 2), np.float32)
+    q = np.zeros((3, 2), np.float32)
+    gids = np.arange(100, 110, dtype=np.int32)
+    d, g = ops.topk_l2(q, pts, jnp.asarray(gids), np.inf, 4)
+    assert np.array_equal(
+        np.asarray(g), np.tile(np.arange(100, 104, dtype=np.int32), (3, 1))
+    )
+    assert np.allclose(np.asarray(d), 0.0)
+
+
+def test_topk_l2_empty_inputs():
+    """N = 0 (and Q = 0) must return the all-padding answer, not crash
+    — the brute referent can legitimately scan an empty live set."""
+    q = np.zeros((3, 2), np.float32)
+    d, g = ops.topk_l2(q, np.zeros((0, 2), np.float32),
+                       jnp.zeros((0,), jnp.int32), np.inf, 4)
+    assert d.shape == (3, 4) and g.shape == (3, 4)
+    assert np.isinf(np.asarray(d)).all() and (np.asarray(g) == -1).all()
+    d, g = ops.topk_l2(np.zeros((0, 2), np.float32),
+                       np.zeros((5, 2), np.float32),
+                       jnp.arange(5, dtype=jnp.int32), np.inf, 4)
+    assert d.shape == (0, 4) and g.shape == (0, 4)
+
+
+def test_topk_l2_per_query_radius():
+    rng = np.random.default_rng(8)
+    pts = rng.standard_normal((60, 3)).astype(np.float32)
+    q = rng.standard_normal((4, 3)).astype(np.float32)
+    gids = jnp.arange(60, dtype=jnp.int32)
+    radii = np.asarray([0.1, 0.5, 1.5, np.inf], np.float32)
+    got_d, got_g = ops.topk_l2(q, pts, gids, jnp.asarray(radii), 5)
+    ref_d, ref_g = ref.topk_l2(q, pts, gids, jnp.asarray(radii), 5)
+    assert np.array_equal(np.asarray(got_g), np.asarray(ref_g))
+    np.testing.assert_allclose(got_d, ref_d, rtol=1e-5, atol=1e-6)
+
+
+def test_brute_topk_matches_brute_oracle():
+    """core/search_jax.brute_topk — the fused brute referent."""
+    from repro.core import search_jax as sj
+
+    rng = np.random.default_rng(12)
+    pts = rng.standard_normal((200, 4)).astype(np.float32)
+    q = rng.standard_normal((7, 4)).astype(np.float32)
+    res = sj.brute_topk(pts, q, 6, 1.8)
+    for i in range(7):
+        bi, bd = brute.constrained_knn(pts, q[i], 6, 1.8)
+        row = np.asarray(res.indices)[i]
+        assert np.array_equal(row[: len(bi)], bi)
+        assert (row[len(bi):] == -1).all()
+        np.testing.assert_allclose(
+            np.asarray(res.distances)[i][: len(bd)], bd, rtol=1e-4, atol=1e-5
+        )
 
 
 def test_lower_bounds_matches_search_quantity():

@@ -230,6 +230,42 @@ def test_same_class_segments_single_dispatch():
     )
 
 
+def test_tombstone_refresh_is_incremental():
+    """A tombstone invalidates ONE member of a stacked class batch; the
+    refresh must patch that slot with `.at[s].set` (O(segment)), not
+    re-stack the whole class (O(class)) — and must not trigger any new
+    traversal compile, since no shape changed."""
+    rng = np.random.default_rng(21)
+    pts = rng.standard_normal((150, 2))
+    idx = make_index(2, cap=64, factor=5)
+    for _ in range(3):  # identical point sets -> one shape class, S=3
+        idx.bulk_load(pts)
+    assert len(qengine.plan(idx.snapshot())) == 1
+    queries = rng.standard_normal((5, 2))
+    idx.constrained_knn(queries, 4, np.inf)  # builds the stacked batch
+    full0 = qengine.stack_stats()["full_builds"]
+    incr0 = qengine.stack_stats()["incremental_updates"]
+    compiles0 = qengine.compile_stats()["traversal_compiles"]
+    # tombstone a handful of points from ONE segment
+    victims = idx.segments[1].gids[:5]
+    idx.delete(victims)
+    got = idx.constrained_knn(queries, 4, np.inf)
+    stats = qengine.stack_stats()
+    assert stats["incremental_updates"] == incr0 + 1  # patched one slot
+    assert stats["full_builds"] == full0              # never re-stacked
+    if compiles0 is not None:  # no novel shape -> no new compile
+        assert qengine.compile_stats()["traversal_compiles"] == compiles0
+    # and the patched batch answers exactly like a from-scratch search
+    pts_live, gids_live = idx.live_points()
+    for i in range(5):
+        bi, bd = brute.constrained_knn(pts_live, queries[i], 4, np.inf)
+        row = got.gids[i][got.gids[i] >= 0]
+        assert set(row.tolist()) == set(gids_live[bi].tolist())
+        np.testing.assert_allclose(
+            got.distances[i][: len(bd)], bd, rtol=1e-4, atol=1e-5
+        )
+
+
 def test_all_tombstoned_snapshot_answers_without_dispatch():
     """Regression (ISSUE 3 satellite): every point tombstoned -> all -1
     gids from the host guard, zero device search dispatches — both for

@@ -53,6 +53,28 @@ def test_empty_and_overfull_k():
     assert (res.gids[0] >= 0).sum() == 5
 
 
+def test_delta_search_pads_to_caller_k():
+    """Regression for the fused-kernel rewire: an arena with capacity
+    (or live count) below k must still answer in the caller's (Q, k)
+    shape, padded with (+inf, -1) — the old host-side `kk < k` pad,
+    now produced by the kernel itself."""
+    from repro.index import delta as delta_mod
+
+    rng = np.random.default_rng(3)
+    buf = delta_mod.DeltaBuffer.empty(4, 2)  # capacity 4 < k=7
+    buf = buf.append(
+        rng.standard_normal((3, 2)), np.arange(10, 13)
+    ).tombstone(np.asarray([1]))
+    q = rng.standard_normal((5, 2)).astype(np.float32)
+    dd, gg = delta_mod.search(buf.points, buf.gids, q, k=7, r=np.inf)
+    assert dd.shape == (5, 7) and gg.shape == (5, 7)
+    dd, gg = np.asarray(dd), np.asarray(gg)
+    # exactly the 2 live points answer; the rest is (+inf, -1) padding
+    assert ((gg >= 0).sum(axis=1) == 2).all()
+    assert np.isinf(dd[:, 2:]).all() and (gg[:, 2:] == -1).all()
+    assert set(gg[0, :2].tolist()) == {10, 12}
+
+
 def test_interleaved_ops_match_oracle():
     """Randomized insert/delete/query interleave across seals and merges."""
     rng = np.random.default_rng(42)
