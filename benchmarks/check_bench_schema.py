@@ -1,0 +1,128 @@
+"""Validate the bench artifacts a run produced (CI gate).
+
+Checks every ``BENCH_<section>.json`` in the output directory
+($BENCH_OUT or ``bench_out``, or argv[1]):
+
+  * section files: ``section`` matches the filename and every record
+    carries ``name`` / numeric ``value`` / ``unit``;
+  * ``BENCH_obs.json``: the three registry sections are present,
+    counters are non-negative integers, gauges are numbers, and every
+    histogram has a ``unit`` plus consistent ``count`` / sparse
+    ``buckets`` pairs (the mergeability contract).
+
+Exits nonzero listing every violation, so CI fails loudly when a bench
+section silently stops emitting or the artifact schema drifts.
+
+Usage: python -m benchmarks.check_bench_schema [out_dir]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+from typing import List
+
+
+def _num(x) -> bool:
+    return isinstance(x, (int, float)) and not isinstance(x, bool)
+
+
+def check_section(path: str, payload: dict) -> List[str]:
+    errs = []
+    want = os.path.basename(path)[len("BENCH_") : -len(".json")]
+    if payload.get("section") != want:
+        errs.append(f"{path}: section={payload.get('section')!r} != {want!r}")
+    records = payload.get("records")
+    if not isinstance(records, list) or not records:
+        errs.append(f"{path}: no records")
+        return errs
+    for i, rec in enumerate(records):
+        for field, pred in (
+            ("name", lambda v: isinstance(v, str) and v),
+            ("value", _num),
+            ("unit", lambda v: isinstance(v, str) and v),
+        ):
+            if not pred(rec.get(field)):
+                errs.append(
+                    f"{path}: records[{i}] bad {field}: {rec.get(field)!r}"
+                )
+    return errs
+
+
+def check_obs(path: str, payload: dict) -> List[str]:
+    errs = []
+    if payload.get("section") != "obs":
+        errs.append(f"{path}: section={payload.get('section')!r} != 'obs'")
+    obs = payload.get("obs")
+    if not isinstance(obs, dict):
+        return errs + [f"{path}: missing 'obs' object"]
+    for part in ("counters", "gauges", "histograms"):
+        if not isinstance(obs.get(part), dict):
+            errs.append(f"{path}: missing obs.{part}")
+    for key, v in obs.get("counters", {}).items():
+        if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+            errs.append(f"{path}: counter {key}={v!r} not a non-negative int")
+    for key, v in obs.get("gauges", {}).items():
+        if not _num(v):
+            errs.append(f"{path}: gauge {key}={v!r} not a number")
+    for key, h in obs.get("histograms", {}).items():
+        if not isinstance(h, dict):
+            errs.append(f"{path}: histogram {key} not an object")
+            continue
+        if not isinstance(h.get("unit"), str) or not h.get("unit"):
+            errs.append(f"{path}: histogram {key} missing unit")
+        for field in ("count", "sum", "buckets"):
+            if field not in h:
+                errs.append(f"{path}: histogram {key} missing {field}")
+        buckets = h.get("buckets", [])
+        ok_pairs = isinstance(buckets, list) and all(
+            isinstance(b, list)
+            and len(b) == 2
+            and isinstance(b[0], int)
+            and isinstance(b[1], int)
+            and b[1] > 0
+            for b in buckets
+        )
+        if not ok_pairs:
+            errs.append(f"{path}: histogram {key} buckets not [edge, n] pairs")
+        elif isinstance(h.get("count"), int) and (
+            sum(b[1] for b in buckets) != h["count"]
+        ):
+            errs.append(
+                f"{path}: histogram {key} bucket counts != count={h['count']}"
+            )
+    return errs
+
+
+def main(argv: List[str]) -> int:
+    out_dir = argv[1] if len(argv) > 1 else os.environ.get(
+        "BENCH_OUT", "bench_out"
+    )
+    paths = sorted(glob.glob(os.path.join(out_dir, "BENCH_*.json")))
+    if not paths:
+        print(f"check_bench_schema: no BENCH_*.json under {out_dir!r}")
+        return 1
+    errs: List[str] = []
+    for path in paths:
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            errs.append(f"{path}: unreadable ({e})")
+            continue
+        if os.path.basename(path) == "BENCH_obs.json":
+            errs.extend(check_obs(path, payload))
+        else:
+            errs.extend(check_section(path, payload))
+    if "BENCH_obs.json" not in {os.path.basename(p) for p in paths}:
+        errs.append(f"{out_dir}: BENCH_obs.json missing")
+    for e in errs:
+        print(f"check_bench_schema: {e}")
+    if not errs:
+        print(f"check_bench_schema: {len(paths)} artifacts OK under {out_dir}")
+    return 1 if errs else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

@@ -118,6 +118,20 @@ def write_bench_json(section: str, out_dir: Optional[str] = None) -> str:
     return path
 
 
+def write_obs_json(out_dir: Optional[str] = None) -> str:
+    """Dump the live observability registry to
+    ``<out_dir>/BENCH_obs.json`` (same artifact convention as the
+    section files: $BENCH_OUT or ``bench_out``). Every bench run
+    produces this alongside its sections, so the counters behind the
+    numbers — dispatches, kernel bytes/FLOPs, seal/merge activity —
+    ship with the timings they explain."""
+    from repro import obs
+
+    out_dir = out_dir or os.environ.get("BENCH_OUT", "bench_out")
+    os.makedirs(out_dir, exist_ok=True)
+    return obs.export.dump_json(os.path.join(out_dir, "BENCH_obs.json"))
+
+
 def build_timed(pts, algo: str):
     spec = SPECS[algo]()
     tree, dt = timed(build, pts, spec)
@@ -137,5 +151,6 @@ __all__ = [
     "emit",
     "reset_records",
     "write_bench_json",
+    "write_obs_json",
     "build_timed",
 ]

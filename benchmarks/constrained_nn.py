@@ -1,7 +1,18 @@
 """Paper Table 2: constrained-NN (Algorithm 2) vs the Liu et al. KNN
 baseline (KNN-then-filter), both on ball*-tree partitioning ("for the
 sake of fairness, we use ball*-tree's space-partitioning algorithm for
-both of the competing methods")."""
+both of the competing methods").
+
+Reported per dataset as nodes-visited *distributions* (mean + p50 /
+p95 / p99), not means alone: the pruning win of the constrained search
+is largest in the tail, and a mean hides exactly the slow queries the
+paper's latency argument is about.
+
+Rides along: an observability-overhead check — the same engine query
+batch timed with the metrics registry enabled vs disabled. The
+acceptance bar is < 5% overhead, so instrumentation can stay on in
+production serving.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -16,37 +27,95 @@ from .common import (
     queries_for,
     radius_for,
     sizes,
+    timed,
 )
+
+
+def _dist_stats(v: np.ndarray) -> dict:
+    return {
+        "mean": float(np.mean(v)),
+        "p50": float(np.percentile(v, 50)),
+        "p95": float(np.percentile(v, 95)),
+        "p99": float(np.percentile(v, 99)),
+    }
+
+
+def _fmt(tag: str, s: dict) -> str:
+    return (
+        f"{tag}_mean={s['mean']:.1f};{tag}_p50={s['p50']:.0f};"
+        f"{tag}_p95={s['p95']:.0f};{tag}_p99={s['p99']:.0f}"
+    )
+
+
+def _obs_overhead(pts: np.ndarray, queries: np.ndarray, r: float, k: int):
+    """Time one engine batch with the registry enabled vs disabled.
+    Same compiled program both ways (enable/disable gates only the
+    host-side accounting), so the delta IS the instrumentation cost."""
+    from repro import obs
+    from repro.index import StreamingConfig, StreamingIndex
+    from repro.query import QuerySpec, engine as qengine
+
+    idx = StreamingIndex(StreamingConfig(dim=pts.shape[1]))
+    idx.bulk_load(pts)
+    snap = idx.snapshot()
+    spec = QuerySpec(k=k, radius=r)
+    run = lambda: qengine.execute(snap, queries, spec)
+    run()  # warm the compile cache outside both timings
+    reps = 5
+    was_enabled = obs.REGISTRY.enabled
+    try:
+        obs.REGISTRY.disable()
+        _, t_off = timed(run, repeat=reps)
+        obs.REGISTRY.enable()
+        _, t_on = timed(run, repeat=reps)
+    finally:
+        (obs.REGISTRY.enable if was_enabled else obs.REGISTRY.disable)()
+    overhead = t_on / t_off - 1.0
+    emit(
+        "constrained_nn/obs_overhead",
+        t_on * 1e6,
+        f"enabled_us;disabled_us={t_off * 1e6:.2f};"
+        f"overhead_pct={overhead * 100:.2f};budget_pct=5",
+    )
+    return overhead
 
 
 def run(full: bool = False, k: int = 10):
     n, n_q = sizes(full)
     n_q = min(n_q, 150 if not full else n_q)
     rows = {}
+    first = None
     for name in sorted(SYNTHETIC):
         pts = dataset(name, n)
         queries = queries_for(pts, n_q)
         r = radius_for(pts)
+        if first is None:
+            first = (pts, queries, r)
         tree, _ = build_timed(pts, "ballstar")
-        v_base = float(
-            np.mean(
-                [sh.knn_then_filter(tree, q, k, r).nodes_visited for q in queries]
-            )
+        v_base = np.asarray(
+            [sh.knn_then_filter(tree, q, k, r).nodes_visited for q in queries]
         )
-        v_cnn = float(
-            np.mean(
-                [sh.constrained_knn(tree, q, k, r).nodes_visited for q in queries]
-            )
+        v_cnn = np.asarray(
+            [sh.constrained_knn(tree, q, k, r).nodes_visited for q in queries]
         )
-        rows[name] = {"knn_filter": v_base, "constrained": v_cnn}
+        sb, sc = _dist_stats(v_base), _dist_stats(v_cnn)
+        rows[name] = {"knn_filter": sb, "constrained": sc}
         emit(
             f"constrained_nn/{name}",
             0.0,
-            f"knn_filter={v_base:.1f};constrained={v_cnn:.1f};"
-            f"reduction={100 * (1 - v_cnn / max(v_base, 1e-9)):.0f}%",
+            f"{_fmt('knn_filter', sb)};{_fmt('constrained', sc)};"
+            f"reduction="
+            f"{100 * (1 - sc['mean'] / max(sb['mean'], 1e-9)):.0f}%",
         )
+    if first is not None:
+        pts, queries, r = first
+        _obs_overhead(pts, queries, r, k)
     return rows
 
 
 if __name__ == "__main__":
     run()
+    from .common import write_bench_json, write_obs_json
+
+    write_bench_json("constrained_nn")
+    write_obs_json()

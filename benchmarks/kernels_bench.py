@@ -23,7 +23,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref
-from repro.kernels.topk_l2 import _next_pow2
+from repro.kernels import pairwise_l2 as _pw
+from repro.kernels import topk_l2 as _tk
 
 from .common import emit, env_caps, timed, write_bench_json
 
@@ -36,16 +37,6 @@ def _capped(m: int, n: int):
     return (min(m, q_cap) if q_cap else m, min(n, n_cap) if n_cap else n)
 
 
-def _selection_stages(kp: int, bn: int) -> int:
-    """Compare-exchange stages per (bm, bn) block of the fused kernel:
-    chunk sort + tournament rounds + the carried 2kp merge."""
-    lk, lb = int(np.log2(kp)), int(np.log2(bn))
-    chunk_sort = lk * (lk + 1) // 2
-    tournament = (lb - lk) * (1 + lk)
-    carried = lk + 1
-    return chunk_sort + tournament + carried
-
-
 def run(full: bool = False):
     rng = np.random.default_rng(0)
     shapes = [_capped(512, 2048) + (64,), _capped(1024, 4096) + (128,)]
@@ -56,10 +47,10 @@ def run(full: bool = False):
         fn = lambda: ref.pairwise_sq_l2(q, p).block_until_ready()
         fn()
         _, dt = timed(fn, repeat=3)
-        flops = 2 * m * n * d + 2 * (m + n) * d  # matmul + norms
-        bytes_ = (m * d + n * d) * 2 + m * n * 4
-        t_comp = flops / PEAK_FLOPS
-        t_mem = bytes_ / HBM_BW
+        # same analytic terms the wrapper accounting bills per call
+        plan = _pw.block_plan(m, n, d, itemsize=2)  # bf16 inputs
+        t_comp = plan["flops"] / PEAK_FLOPS
+        t_mem = plan["hbm_bytes"] / HBM_BW
         emit(
             f"kernel/pairwise_l2/{m}x{n}x{d}",
             dt * 1e6,
@@ -75,24 +66,21 @@ def run(full: bool = False):
         gids[::13] = -1  # some dead slots so the liveness gate is live
         g = jnp.asarray(gids)
         for k in (8, 64):
-            kp, bn = _next_pow2(k), max(_next_pow2(k), 128)
             # unfused wall time (XLA:CPU oracle): materialize + argsort
             fn = lambda: ref.topk_l2(q, p, g, np.inf, k)[0].block_until_ready()
             fn()
             _, dt = timed(fn, repeat=3)
             # HBM traffic: both paths read q, p, gids and write (Q, k);
             # the unfused path additionally writes the (Q, N) matrix and
-            # reads it back for the row sort
-            bytes_io = (m * d + n * d) * 4 + n * 4 + m * kp * 12
-            bytes_unfused = bytes_io + 2 * m * n * 4
-            bytes_fused = bytes_io
-            # FLOPs: shared MXU matmul + the fused kernel's VPU
-            # selection network (~8 elementary ops per lane per stage)
-            flops_mm = 2 * m * n * d + 2 * (m + n) * d
-            flops_sel = 8 * m * n * _selection_stages(kp, bn)
+            # reads it back for the row sort. The fused side's bytes and
+            # FLOPs (matmul + selection network) come from the kernel's
+            # own block_plan — the same terms ops.py bills per call
+            plan = _tk.block_plan(m, n, d, k)
+            bytes_fused = plan["hbm_bytes"]
+            bytes_unfused = bytes_fused + 2 * m * n * 4
             t_mem_f = bytes_fused / HBM_BW
             t_mem_u = bytes_unfused / HBM_BW
-            t_comp_f = (flops_mm + flops_sel) / PEAK_FLOPS
+            t_comp_f = plan["flops"] / PEAK_FLOPS
             emit(
                 f"kernel/topk_l2/{m}x{n}x{d}/k={k}",
                 dt * 1e6,

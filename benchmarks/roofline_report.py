@@ -3,11 +3,19 @@
 Reads artifacts/dryrun/*.json produced by `repro.launch.dryrun` and
 prints the three roofline terms per (arch × shape × mesh), the dominant
 bottleneck, and the useful-FLOP ratio. Harmless no-op if the dry-run has
-not been executed yet."""
+not been executed yet.
+
+Also reports the *observed* kernel accounting: `kernels/ops.py` bills
+every kernel launch of this process to the obs registry (calls, HBM
+bytes, FLOPs — from each kernel's `block_plan`), so when roofline runs
+after other bench sections it prints what the workload actually
+launched, not just the dry-run's static analysis."""
 from __future__ import annotations
 
 import json
 import pathlib
+
+from .common import emit
 
 ART = pathlib.Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
 
@@ -38,9 +46,46 @@ def terms(rec: dict) -> dict:
     return out
 
 
+def kernel_accounting_rows() -> dict:
+    """Per-kernel (calls, hbm_bytes, flops, arithmetic intensity) from
+    the registry counters accumulated so far in this process."""
+    from repro import obs
+
+    rows = {}
+    snap = obs.snapshot()["counters"]
+    for key, calls in snap.items():
+        if not key.startswith("kernel.calls{"):
+            continue
+        kernel = key[len("kernel.calls{kernel=") : -1]
+        b = snap.get(f"kernel.hbm_bytes{{kernel={kernel}}}", 0)
+        fl = snap.get(f"kernel.flops{{kernel={kernel}}}", 0)
+        rows[kernel] = {
+            "calls": calls,
+            "hbm_bytes": b,
+            "flops": fl,
+            "ai": fl / b if b else 0.0,
+            "tpu_bound": (
+                "compute"
+                if fl / PEAK_FLOPS > b / HBM_BW
+                else "memory"
+            )
+            if b
+            else "unknown",
+        }
+    return rows
+
+
 def run(full: bool = False):
+    for kernel, t in sorted(kernel_accounting_rows().items()):
+        emit(
+            f"roofline/observed/{kernel}",
+            t["calls"],
+            f"hbm_bytes={t['hbm_bytes']};flops={t['flops']};"
+            f"ai={t['ai']:.2f}flops_per_byte;tpu_bound={t['tpu_bound']}",
+            unit="calls",
+        )
     if not ART.exists():
-        print("roofline,0.00,no_artifacts_yet_run_launch.dryrun")
+        emit("roofline/dryrun", 0.0, "no_artifacts_yet_run_launch.dryrun")
         return {}
     rows = {}
     for f in sorted(ART.glob("*.json")):
@@ -50,11 +95,12 @@ def run(full: bool = False):
         t = terms(rec)
         rows[f.stem] = t
         ratio = t.get("useful_flop_ratio")
-        print(
-            f"roofline/{f.stem},{t[t['dominant'] + '_s'] * 1e6:.0f},"
+        emit(
+            f"roofline/{f.stem}",
+            t[t["dominant"] + "_s"] * 1e6,
             f"compute_s={t['compute_s']:.4f};memory_s={t['memory_s']:.4f};"
             f"collective_s={t['collective_s']:.4f};dominant={t['dominant']}"
-            + (f";useful_flops={ratio:.2f}" if ratio else "")
+            + (f";useful_flops={ratio:.2f}" if ratio else ""),
         )
     return rows
 

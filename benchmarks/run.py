@@ -61,6 +61,11 @@ def main() -> None:
         else:
             path = common.write_bench_json(name)
             print(f"{name},0.00,json={path}")
+    # the registry accumulated across every section above: one artifact
+    # holding the counters behind the numbers (dispatches, kernel
+    # bytes/FLOPs, index churn), validated by check_bench_schema.py
+    obs_path = common.write_obs_json()
+    print(f"obs,0.00,json={obs_path}")
     print(f"total,{(time.time() - t0) * 1e6:.0f},bench_wall_time")
     if failed:  # nonzero exit so the CI benchmark-smoke leg catches drift
         sys.exit(f"benchmark sections failed: {','.join(failed)}")

@@ -18,7 +18,7 @@ two, and expansion only descends, so the stack never exceeds depth+2.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import numpy as np
 
@@ -60,6 +60,13 @@ class KnnResult(NamedTuple):
     indices: jax.Array    # (Q, k) original point ids, -1 = no result
     distances: jax.Array  # (Q, k) inf where no result
     nodes_visited: jax.Array  # (Q,)
+    # paper-metric accounting (host oracle parity: SearchStats fields).
+    # `leaves_visited` counts scanned NON-EMPTY leaves (a leaf whose
+    # slots are all -1 — only the stacked batch's dummy pad member has
+    # one — is not billed); `points_examined` counts live leaf slots
+    # whose distance was evaluated (the paper's "distance computations")
+    leaves_visited: Optional[jax.Array] = None    # (Q,)
+    points_examined: Optional[jax.Array] = None   # (Q,)
 
 
 def _traverse_one(dt: DeviceTree, q, r, k: int, stack_size: int):
@@ -76,7 +83,7 @@ def _traverse_one(dt: DeviceTree, q, r, k: int, stack_size: int):
         return sp > 0
 
     def body(state):
-        sp, stack_n, stack_b, best_d, best_i, visits = state
+        sp, stack_n, stack_b, best_d, best_i, visits, leaves, cands = state
         sp = sp - 1
         node = stack_n[sp]
         d_par = stack_b[sp]
@@ -105,6 +112,14 @@ def _traverse_one(dt: DeviceTree, q, r, k: int, stack_size: int):
         take_leaf = is_leaf & ~prune
         best_d = jnp.where(take_leaf, new_d, best_d)
         best_i = jnp.where(take_leaf, new_i, best_i)
+        # paper accounting, host-oracle parity: leaves_visited counts a
+        # scanned leaf holding at least one live point (so the stacked
+        # dummy pad member — an all-dead leaf — bills nothing), and
+        # points_examined counts the live slots whose distance was
+        # computed (dead/padding slots are masked, never candidates)
+        n_real = (dt.leaf_index[rank] >= 0).sum().astype(jnp.int32)
+        leaves = leaves + jnp.where(take_leaf & (n_real > 0), 1, 0)
+        cands = cands + jnp.where(take_leaf, n_real, 0)
 
         # ---- internal expansion ------------------------------------------
         l = jnp.maximum(dt.child_l[node], 0)
@@ -138,7 +153,7 @@ def _traverse_one(dt: DeviceTree, q, r, k: int, stack_size: int):
             jnp.where(push_near == 1, d_n, stack_b[idx1])
         )
         sp2 = sp1 + push_near
-        return (sp2, stack_n, stack_b, best_d, best_i, visits)
+        return (sp2, stack_n, stack_b, best_d, best_i, visits, leaves, cands)
 
     state = (
         jnp.int32(1),
@@ -147,9 +162,13 @@ def _traverse_one(dt: DeviceTree, q, r, k: int, stack_size: int):
         best_d,
         best_i,
         jnp.int32(0),
+        jnp.int32(0),
+        jnp.int32(0),
     )
-    sp, _, _, best_d, best_i, visits = jax.lax.while_loop(cond, body, state)
-    return best_d, best_i, visits
+    (sp, _, _, best_d, best_i, visits, leaves, cands) = jax.lax.while_loop(
+        cond, body, state
+    )
+    return best_d, best_i, visits, leaves, cands
 
 
 @functools.partial(jax.jit, static_argnames=("k", "stack_size"))
@@ -164,22 +183,36 @@ def constrained_knn(
     fn = jax.vmap(
         lambda q, ri: _traverse_one(dt, q, ri, k, stack_size)
     )
-    best_d, best_i, visits = fn(queries, r)
-    return KnnResult(indices=best_i, distances=best_d, nodes_visited=visits)
+    best_d, best_i, visits, leaves, cands = fn(queries, r)
+    return KnnResult(
+        indices=best_i,
+        distances=best_d,
+        nodes_visited=visits,
+        leaves_visited=leaves,
+        points_examined=cands,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("k", "stack_size"))
 def knn(dt: DeviceTree, queries: jax.Array, k: int, stack_size: int):
     r = jnp.full(queries.shape[:1], jnp.inf, dt.center.dtype)
     fn = jax.vmap(lambda q, ri: _traverse_one(dt, q, ri, k, stack_size))
-    best_d, best_i, visits = fn(queries, r)
-    return KnnResult(indices=best_i, distances=best_d, nodes_visited=visits)
+    best_d, best_i, visits, leaves, cands = fn(queries, r)
+    return KnnResult(
+        indices=best_i,
+        distances=best_d,
+        nodes_visited=visits,
+        leaves_visited=leaves,
+        points_examined=cands,
+    )
 
 
 class StackedResult(NamedTuple):
     gids: jax.Array           # (Q, k) merged global ids, -1 = no result
     distances: jax.Array      # (Q, k) merged, ascending; inf = no result
     nodes_visited: jax.Array  # (Q,) summed over the stacked segments
+    leaves_visited: Optional[jax.Array] = None    # (Q,) summed, non-empty
+    points_examined: Optional[jax.Array] = None   # (Q,) summed live slots
 
 
 @functools.partial(jax.jit, static_argnames=("k", "stack_size"))
@@ -199,15 +232,21 @@ def constrained_knn_stacked(
     n = gids.shape[1]
 
     def per_segment(dt, g):
-        bd, bi, v = jax.vmap(
+        bd, bi, v, lv, pe = jax.vmap(
             lambda q, ri: _traverse_one(dt, q, ri, k, stack_size)
         )(queries, r)
         gg = jnp.where(bi >= 0, g[jnp.clip(bi, 0, n - 1)], -1)
-        return bd, gg, v
+        return bd, gg, v, lv, pe
 
-    bd, gg, v = jax.vmap(per_segment)(dts, gids)  # (S, Q, k) ×2, (S, Q)
+    bd, gg, v, lv, pe = jax.vmap(per_segment)(dts, gids)  # (S, Q, …)
     d, g = qmerge.merge_parts([(bd[s], gg[s]) for s in range(bd.shape[0])], k)
-    return StackedResult(gids=g, distances=d, nodes_visited=v.sum(0))
+    return StackedResult(
+        gids=g,
+        distances=d,
+        nodes_visited=v.sum(0),
+        leaves_visited=lv.sum(0),
+        points_examined=pe.sum(0),
+    )
 
 
 def brute_topk(

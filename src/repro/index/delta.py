@@ -26,6 +26,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import ops
 
 
@@ -105,4 +106,7 @@ def search(points: jax.Array, gids: jax.Array, queries: jax.Array, k: int, r):
     """
     q = jnp.asarray(queries, jnp.float32)
     rb = jnp.broadcast_to(jnp.asarray(r, jnp.float32), q.shape[:1])
+    if obs.REGISTRY.enabled:
+        obs.REGISTRY.counter("delta.searches").inc()
+        obs.REGISTRY.counter("delta.query_rows").inc(int(q.shape[0]))
     return ops.topk_l2(q, points, gids, rb, k)

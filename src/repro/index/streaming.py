@@ -28,10 +28,12 @@ merge, or compaction.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.core.types import TreeSpec
 
 from . import search as search_mod
@@ -70,6 +72,9 @@ class _State:
     segments: Dict[int, Segment]
 
 
+_INSTANCE_IDS = itertools.count()
+
+
 class StreamingIndex:
     def __init__(self, config: StreamingConfig) -> None:
         self.config = config
@@ -80,6 +85,27 @@ class StreamingIndex:
             delta=DeltaBuffer.empty(config.delta_capacity, config.dim),
             segments={},
         )
+        # registry handles, labeled per instance so concurrent indexes
+        # (tests, serving shards) don't fold into one series
+        lbl = {"index": f"idx{next(_INSTANCE_IDS)}"}
+        reg = obs.REGISTRY
+        self._c_inserts = reg.counter("index.inserts", **lbl)
+        self._c_deletes = reg.counter("index.deletes", **lbl)
+        self._c_seals = reg.counter("index.seals", **lbl)
+        self._c_sealed_points = reg.counter("index.sealed_points", **lbl)
+        self._c_merges = {
+            kind: reg.counter("index.merges", kind=kind, **lbl)
+            for kind in ("tiered", "purge")
+        }
+        self._c_segments_merged = reg.counter("index.segments_merged", **lbl)
+        self._c_compactions = reg.counter("index.compactions", **lbl)
+        self._c_bulk_loads = reg.counter("index.bulk_loads", **lbl)
+        self._g_version = reg.gauge("index.version", **lbl)
+        self._g_n_live = reg.gauge("index.n_live", **lbl)
+        self._g_n_segments = reg.gauge("index.n_segments", **lbl)
+        self._g_delta_fill = reg.gauge("index.delta_fill", **lbl)
+        self._g_delta_occupancy = reg.gauge("index.delta_occupancy", **lbl)
+        self._g_garbage = reg.gauge("index.tombstone_garbage_ratio", **lbl)
 
     # -- introspection -------------------------------------------------------
     @property
@@ -116,6 +142,8 @@ class StreamingIndex:
         cfg = self.config
         state = self._state
         segs = list(state.segments.values())
+        n_total = sum(s.n_points for s in segs) + state.delta.size
+        n_dead = sum(s.n_dead for s in segs) + state.delta.n_dead
         return {
             "version": state.version,
             "n_live": self.n_live,
@@ -127,6 +155,20 @@ class StreamingIndex:
             "tiers": sorted(
                 tier_of(s.n_live, cfg.delta_capacity, cfg.merge_factor)
                 for s in segs
+            ),
+            # registry-backed lifetime counters (survive compaction,
+            # whereas everything above describes only the current state)
+            "inserts": self._c_inserts.value,
+            "deletes": self._c_deletes.value,
+            "seals": self._c_seals.value,
+            "sealed_points": self._c_sealed_points.value,
+            "tiered_merges": self._c_merges["tiered"].value,
+            "purge_merges": self._c_merges["purge"].value,
+            "segments_merged": self._c_segments_merged.value,
+            "compactions": self._c_compactions.value,
+            "bulk_loads": self._c_bulk_loads.value,
+            "tombstone_garbage_ratio": (
+                n_dead / n_total if n_total else 0.0
             ),
         }
 
@@ -153,6 +195,7 @@ class StreamingIndex:
                     i += take
                 if delta.free == 0:
                     delta, segments = self._seal_delta(delta, segments)
+            self._c_inserts.inc(len(pts))
             self._commit(delta, segments)
         except BaseException:
             self._recover_log()
@@ -175,6 +218,8 @@ class StreamingIndex:
                 )
                 # repeated bulk loads must still respect the tier bound
                 delta, segments = self._maybe_compact(delta, segments)
+            self._c_bulk_loads.inc()
+            self._c_inserts.inc(len(pts))
             self._commit(delta, segments)
         except BaseException:
             self._recover_log()
@@ -197,6 +242,7 @@ class StreamingIndex:
                 else:
                     segments[holder] = segments[holder].tombstone(pos)
             delta, segments = self._maybe_compact(delta, segments)
+            self._c_deletes.inc(n)
             self._commit(delta, segments)
         except BaseException:
             self._recover_log()
@@ -231,6 +277,7 @@ class StreamingIndex:
                         pts, gids, self.config.spec, backend=self.config.backend
                     ),
                 )
+            self._c_compactions.inc()
             self._commit(delta, segments)
         except BaseException:
             self._recover_log()
@@ -290,9 +337,21 @@ class StreamingIndex:
         self.log = log
 
     def _commit(self, delta: DeltaBuffer, segments: Dict[int, Segment]) -> None:
-        self._state = _State(
+        state = _State(
             version=self._state.version + 1, delta=delta, segments=segments
         )
+        self._state = state
+        if obs.REGISTRY.enabled:
+            segs = state.segments.values()
+            n_live = sum(s.n_live for s in segs) + delta.n_live
+            n_dead = sum(s.n_dead for s in segs) + delta.n_dead
+            n_total = sum(s.n_points for s in segs) + delta.size
+            self._g_version.set(state.version)
+            self._g_n_live.set(n_live)
+            self._g_n_segments.set(len(state.segments))
+            self._g_delta_fill.set(delta.size)
+            self._g_delta_occupancy.set(delta.size / delta.capacity)
+            self._g_garbage.set(n_dead / n_total if n_total else 0.0)
 
     def _install(self, segments: Dict[int, Segment], seg: Segment) -> None:
         uid = self._next_uid
@@ -310,6 +369,8 @@ class StreamingIndex:
                     pts, gids, self.config.spec, backend=self.config.backend
                 ),
             )
+            self._c_seals.inc()
+            self._c_sealed_points.inc(len(pts))
         return self._maybe_compact(delta, segments)
 
     def _maybe_compact(self, delta, segments):
@@ -321,6 +382,7 @@ class StreamingIndex:
             uids = list(segments.keys())
             segs = [segments[u] for u in uids]
             groups = plan_merges(segs, cfg.delta_capacity, cfg.merge_factor)
+            kind = "tiered"
             # a mostly-dead segment is rebuilt alone to purge its garbage
             if not groups:
                 solo = [
@@ -329,6 +391,7 @@ class StreamingIndex:
                     if s.n_dead > cfg.purge_fraction * s.n_points
                 ]
                 groups = solo[:1]
+                kind = "purge"
             if not groups:
                 return delta, segments
             for group in groups:
@@ -339,4 +402,6 @@ class StreamingIndex:
                     del segments[uids[i]]
                 if merged is not None:
                     self._install(segments, merged)
+                self._c_merges[kind].inc()
+                self._c_segments_merged.inc(len(group))
             # loop: the merged segment may tip the next tier over factor

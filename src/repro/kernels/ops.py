@@ -9,6 +9,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 from . import pairwise_l2 as _pw
 from . import cov_matvec as _cm
 from . import topk_l2 as _tk
@@ -18,9 +20,34 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _account(kernel: str, plan: dict) -> None:
+    """Bill one launch to the registry: calls, analytic HBM bytes, and
+    FLOPs per kernel — the inputs of the roofline report."""
+    reg = obs.REGISTRY
+    reg.counter("kernel.calls", kernel=kernel).inc()
+    reg.counter("kernel.hbm_bytes", kernel=kernel).inc(plan["hbm_bytes"])
+    reg.counter("kernel.flops", kernel=kernel).inc(plan["flops"])
+    reg.counter("kernel.blocks", kernel=kernel).inc(plan["blocks"])
+
+
+def _concrete(*arrays) -> bool:
+    """True when the wrapper runs eagerly (host call time). Inside a
+    trace (e.g. cov_matvec under `lax.fori_loop`) the inputs are
+    Tracers and a per-call count would be wrong — one trace, many
+    executions — so accounting is skipped."""
+    return not any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
 def pairwise_sq_l2(q, p, **kw):
     """Blocked squared-L2 distance matrix (M, N) f32."""
     kw.setdefault("interpret", _interpret())
+    if obs.REGISTRY.enabled and _concrete(q, p):
+        m, d = q.shape
+        n = p.shape[0]
+        _account(
+            "pairwise_sq_l2",
+            _pw.block_plan(m, n, d, itemsize=jnp.dtype(q.dtype).itemsize),
+        )
     return _pw.pairwise_sq_l2(q, p, **kw)
 
 
@@ -33,6 +60,11 @@ def topk_l2(q, p, gids, r, k, **kw):
     """Fused streaming constrained top-k: (Q, k) ascending (dist, gid)
     without ever materializing the (Q, N) distance matrix."""
     kw.setdefault("interpret", _interpret())
+    if obs.REGISTRY.enabled and _concrete(q, p, gids):
+        m, d = q.shape
+        n = p.shape[0]
+        if m and n:
+            _account("topk_l2", _tk.block_plan(m, n, d, k))
     return _tk.topk_l2(q, p, gids, r, k, **kw)
 
 
@@ -46,6 +78,14 @@ def lower_bounds(q, centers, radii, **kw):
 def cov_matvec(x, mean, w, **kw):
     """Fused centered-covariance matvec (one power-iteration step)."""
     kw.setdefault("interpret", _interpret())
+    if obs.REGISTRY.enabled and _concrete(x, mean, w):
+        n, d = x.shape
+        _account(
+            "cov_matvec",
+            # two matvecs over one streaming read of x; no blocking
+            # geometry to resolve, so the plan is the formulas alone
+            {"flops": 4 * n * d, "hbm_bytes": n * d * 4, "blocks": 1},
+        )
     return _cm.cov_matvec(x, mean, w, **kw)
 
 

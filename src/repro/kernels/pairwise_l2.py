@@ -29,6 +29,41 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def block_plan(
+    m: int,
+    n: int,
+    d: int,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+    itemsize: int = 4,
+) -> dict:
+    """Resolved launch geometry + analytic cost of one pairwise call.
+
+    Mirrors the clamp logic of `pairwise_sq_l2` exactly, so the wrapper
+    accounting (`ops.py`) and the roofline benchmarks
+    (`benchmarks/kernels_bench.py`) bill the same blocks/bytes/FLOPs —
+    one source of truth for what a launch costs.
+    """
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 128))
+    bk = min(bk, _round_up(d, 128))
+    mp, np_, dp = _round_up(m, bm), _round_up(n, bn), _round_up(d, bk)
+    grid = (mp // bm, np_ // bn, dp // bk)
+    return {
+        "bm": bm,
+        "bn": bn,
+        "bk": bk,
+        "grid": grid,
+        "blocks": grid[0] * grid[1] * grid[2],
+        # matmul + the two norm accumulations
+        "flops": 2 * m * n * d + 2 * (m + n) * d,
+        # read q and p once, write the (M, N) f32 matrix
+        "hbm_bytes": (m * d + n * d) * itemsize + m * n * 4,
+    }
+
+
 def _kernel(q_ref, p_ref, o_ref, *, k_steps: int):
     kk = pl.program_id(2)
 
@@ -83,17 +118,18 @@ def pairwise_sq_l2(
     ppad = jnp.zeros((np_, dp), p.dtype).at[:n, :d].set(p)
     k_steps = dp // bk
     grid = (mp // bm, np_ // bn, k_steps)
-    out = pl.pallas_call(
-        functools.partial(_kernel, k_steps=k_steps),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
-        interpret=interpret,
-    )(qpad, ppad)
+    with jax.named_scope("kernel.pairwise_sq_l2"):
+        out = pl.pallas_call(
+            functools.partial(_kernel, k_steps=k_steps),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+                pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+            interpret=interpret,
+        )(qpad, ppad)
     return out[:m, :n]
 
 

@@ -63,6 +63,56 @@ def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
 
 
+def selection_stages(kp: int, bn: int) -> int:
+    """Compare-exchange stages per (bm, bn) block: chunk sort +
+    tournament rounds + the carried 2kp merge. Used by `block_plan`
+    and the roofline benchmarks to cost the VPU selection network."""
+    lk, lb = int(np.log2(kp)), int(np.log2(bn))
+    chunk_sort = lk * (lk + 1) // 2
+    tournament = (lb - lk) * (1 + lk)
+    carried = lk + 1
+    return chunk_sort + tournament + carried
+
+
+def block_plan(
+    m: int,
+    n: int,
+    d: int,
+    k: int,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 512,
+) -> dict:
+    """Resolved launch geometry + analytic cost of one fused top-k call.
+
+    Mirrors the clamp logic of `topk_l2` exactly — the single source of
+    truth shared by the wrapper accounting (`ops.py`) and the roofline
+    benchmarks (`benchmarks/kernels_bench.py`).
+    """
+    kp = _next_pow2(k)
+    bm = min(bm, _round_up(m, 8))
+    bn = max(kp, min(_next_pow2(bn), _round_up(_next_pow2(n), 128)))
+    bk = min(bk, _round_up(d, 128))
+    mp, np_, dp = _round_up(m, bm), _round_up(n, bn), _round_up(d, bk)
+    grid = (mp // bm, np_ // bn, dp // bk)
+    return {
+        "kp": kp,
+        "bm": bm,
+        "bn": bn,
+        "bk": bk,
+        "grid": grid,
+        "blocks": grid[0] * grid[1] * grid[2],
+        # shared MXU matmul + ~8 elementary VPU ops per lane per
+        # compare-exchange stage of the selection network
+        "flops": 2 * m * n * d
+        + 2 * (m + n) * d
+        + 8 * m * n * selection_stages(kp, bn),
+        # stream q, p, gids once; write the (Q, kp) d/gid/slot triple
+        "hbm_bytes": (m * d + n * d) * 4 + n * 4 + m * kp * 12,
+    }
+
+
 def _asc_groups(width: int, stride: int, size: int, invert: bool):
     """Per-pair-group sort direction for a compare-exchange at
     `stride` during bitonic stage `size`: lane i sorts ascending iff
@@ -244,30 +294,31 @@ def topk_l2(
     rpad = jnp.zeros((mp, 1), jnp.float32).at[:m, 0].set(rb)
     k_steps = dp // bk
     grid = (mp // bm, np_ // bn, k_steps)
-    out_d, out_g, _slots = pl.pallas_call(
-        functools.partial(
-            _kernel, k_steps=k_steps, kp=kp, bm=bm, bn=bn
-        ),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
-            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bm, kp), lambda i, j, kk: (i, 0)),
-            pl.BlockSpec((bm, kp), lambda i, j, kk: (i, 0)),
-            pl.BlockSpec((bm, kp), lambda i, j, kk: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((mp, kp), jnp.float32),
-            jax.ShapeDtypeStruct((mp, kp), jnp.int32),
-            jax.ShapeDtypeStruct((mp, kp), jnp.int32),
-        ],
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        interpret=interpret,
-    )(qpad, ppad, gpad, rpad)
+    with jax.named_scope("kernel.topk_l2"):
+        out_d, out_g, _slots = pl.pallas_call(
+            functools.partial(
+                _kernel, k_steps=k_steps, kp=kp, bm=bm, bn=bn
+            ),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+                pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+                pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((bm, kp), lambda i, j, kk: (i, 0)),
+                pl.BlockSpec((bm, kp), lambda i, j, kk: (i, 0)),
+                pl.BlockSpec((bm, kp), lambda i, j, kk: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((mp, kp), jnp.float32),
+                jax.ShapeDtypeStruct((mp, kp), jnp.int32),
+                jax.ShapeDtypeStruct((mp, kp), jnp.int32),
+            ],
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            interpret=interpret,
+        )(qpad, ppad, gpad, rpad)
     dd = out_d[:m, :k]
     gg = jnp.where(jnp.isinf(dd), -1, out_g[:m, :k])
     return dd, gg

@@ -1,0 +1,84 @@
+"""Export the registry: JSON payloads (`BENCH_obs.json`) + human tables.
+
+The JSON shape is the bench-artifact convention (`benchmarks/common.py`
+writes per-section `BENCH_<section>.json` files; this module writes the
+`obs` section) and is validated in CI by
+`benchmarks/check_bench_schema.py`:
+
+    {
+      "section": "obs",
+      "generated_unix": ...,
+      "obs": {
+        "counters":   {"engine.dispatches{kind=traversal}": 123, ...},
+        "gauges":     {"index.delta_occupancy{index=idx0}": 0.4, ...},
+        "histograms": {"span.serve.search": {"unit": "s", "count": ...,
+                       "sum": ..., "buckets": [[log2_edge, n], ...],
+                       "p50": ..., "p95": ..., "p99": ...}, ...}
+      }
+    }
+
+Histogram buckets are sparse ``[log2 upper edge, count]`` pairs on the
+process-global log2 ladder, so artifacts from different runs / shards
+merge by adding counts per edge — percentiles stay valid after merging
+(the Bläsius-et-al. benchmarking methodology: keep distributions, not
+means).
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Optional
+
+from . import metrics
+
+
+def to_payload(registry: Optional[metrics.Registry] = None) -> dict:
+    reg = registry or metrics.REGISTRY
+    return {
+        "section": "obs",
+        "generated_unix": time.time(),
+        "obs": reg.snapshot(),
+    }
+
+
+def dump_json(path: str, registry: Optional[metrics.Registry] = None) -> str:
+    with open(path, "w") as f:
+        json.dump(to_payload(registry), f, indent=1)
+    return path
+
+
+def load_json(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def table(snap: Optional[dict] = None) -> str:
+    """Human-readable dump of a registry snapshot (or the live one)."""
+    snap = snap if snap is not None else metrics.snapshot()
+    lines = []
+    if snap["counters"]:
+        lines.append("== counters ==")
+        w = max(map(len, snap["counters"]))
+        for k, v in snap["counters"].items():
+            lines.append(f"  {k:<{w}}  {v}")
+    if snap["gauges"]:
+        lines.append("== gauges ==")
+        w = max(map(len, snap["gauges"]))
+        for k, v in snap["gauges"].items():
+            lines.append(f"  {k:<{w}}  {v:.6g}")
+    if snap["histograms"]:
+        lines.append("== histograms ==")
+        for k, h in snap["histograms"].items():
+            mean = h["sum"] / h["count"] if h["count"] else 0.0
+            pct = (
+                f"  p50={h['p50']:.3g} p95={h['p95']:.3g} p99={h['p99']:.3g}"
+                if h["count"]
+                else ""
+            )
+            lines.append(
+                f"  {k} [{h['unit']}]  n={h['count']} mean={mean:.3g}{pct}"
+            )
+    return "\n".join(lines) if lines else "(registry empty)"
+
+
+__all__ = ["dump_json", "load_json", "table", "to_payload"]

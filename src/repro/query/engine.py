@@ -24,10 +24,15 @@ tokens: a steady read phase re-stacks nothing, and any seal / merge /
 tombstone refreshes the affected tokens, invalidating exactly the
 classes it touched.
 
-Instrumentation: `dispatch_count()` (device search dispatches),
-`observed_signatures()` (distinct dispatch signatures the planner has
-issued), and `compile_stats()` (traversal jit-cache entries) — used by
-the compile-bound tests and `benchmarks/streaming.py`.
+Instrumentation lives on the process-wide observability registry
+(`repro.obs`): dispatch/signature/stack-cache counters are registry
+metrics (atomic — the old module-global ints raced under threads), each
+execute() stage runs in an `obs.span` (plan / stack / dispatch / delta /
+merge — host timing + XLA profile annotation), and an active
+`obs.QueryTrace` additionally receives the per-query device-derived
+paper metrics (nodes visited, leaves scanned, candidates evaluated).
+`dispatch_count()` / `observed_signatures()` / `compile_stats()` /
+`stack_stats()` remain as thin compat shims over the registry.
 """
 from __future__ import annotations
 
@@ -39,6 +44,7 @@ import numpy as np
 
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import search_jax as sj
 from repro.query import merge as qmerge
 from repro.query import shapes
@@ -49,20 +55,44 @@ class EngineResult(NamedTuple):
     gids: np.ndarray            # (Q, k) global ids, -1 = no result
     distances: np.ndarray       # (Q, k) +inf where no result
     nodes_visited: Optional[np.ndarray]  # (Q,) traversal visits, or None
+    # populated alongside nodes_visited (spec.return_visits or an active
+    # QueryTrace): scanned non-empty leaves and distance-evaluated live
+    # candidates per query — the paper's full accounting currency
+    leaves_scanned: Optional[np.ndarray] = None
+    points_examined: Optional[np.ndarray] = None
 
 
 # -- instrumentation ---------------------------------------------------------
-_DISPATCHES = 0            # ALL device search dispatches (traversal + delta)
-_TRAVERSAL_DISPATCHES = 0  # stacked-traversal dispatches only
-_SIGNATURES = set()        # distinct stacked-dispatch signatures ever issued
+# All engine counters live on the obs registry (atomic increments; the
+# registry's `snapshot()` exports them to BENCH_obs.json). Handles are
+# cached here: registry reset() zeroes them in place, never orphans them.
+# NOTE: disabling the registry (obs.REGISTRY.disable()) pauses these
+# counters too — the compat shims below report whatever was recorded.
+_C_TRAVERSAL = obs.REGISTRY.counter("engine.dispatches", kind="traversal")
+_C_DELTA = obs.REGISTRY.counter("engine.dispatches", kind="delta")
+_C_STACK_FULL = obs.REGISTRY.counter("engine.stack_cache", kind="full_build")
+_C_STACK_INCR = obs.REGISTRY.counter("engine.stack_cache", kind="incremental")
+_G_SIGNATURES = obs.REGISTRY.gauge("engine.signatures")
+_G_STACK_CACHE = obs.REGISTRY.gauge("engine.stack_cache_entries")
+
+# distinct stacked-dispatch signatures ever issued: the registry holds
+# the cardinality gauge; the tuples themselves (returned by
+# `observed_signatures()`, used by the compile-bound tests) need a set,
+# guarded by its own lock — the old code mutated it with NO lock, so
+# racing writers could lose elements mid-rehash
+_SIGNATURES: set = set()
+_SIG_LOCK = threading.Lock()
 
 
 def dispatch_count() -> int:
-    return _DISPATCHES
+    """ALL device search dispatches (traversal + delta). Compat shim
+    over the registry counters."""
+    return _C_TRAVERSAL.value + _C_DELTA.value
 
 
 def observed_signatures() -> frozenset:
-    return frozenset(_SIGNATURES)
+    with _SIG_LOCK:
+        return frozenset(_SIGNATURES)
 
 
 def compile_stats() -> dict:
@@ -78,8 +108,8 @@ def compile_stats() -> dict:
     ]
     return {
         "traversal_compiles": sum(sizes) if sizes else None,
-        "traversal_dispatches": _TRAVERSAL_DISPATCHES,
-        "dispatches": _DISPATCHES,
+        "traversal_dispatches": _C_TRAVERSAL.value,
+        "dispatches": dispatch_count(),
     }
 
 
@@ -129,8 +159,6 @@ def plan(snapshot) -> List[ClassGroup]:
 _STACK_CACHE: "collections.OrderedDict" = collections.OrderedDict()
 _STACK_CACHE_MAX = 8
 _STACK_LOCK = threading.Lock()
-_STACK_FULL_BUILDS = 0   # whole-class jnp.stack builds
-_STACK_INCR_UPDATES = 0  # O(segment) .at[s].set patches
 
 
 class _StackEntry(NamedTuple):
@@ -141,10 +169,11 @@ class _StackEntry(NamedTuple):
 
 def stack_stats() -> dict:
     """Counters for the stacked-batch cache: how many refreshes rebuilt
-    a whole class batch vs patched a single member slot."""
+    a whole class batch vs patched a single member slot. Compat shim
+    over the registry counters."""
     return {
-        "full_builds": _STACK_FULL_BUILDS,
-        "incremental_updates": _STACK_INCR_UPDATES,
+        "full_builds": _C_STACK_FULL.value,
+        "incremental_updates": _C_STACK_INCR.value,
     }
 
 
@@ -182,7 +211,6 @@ def _incremental_update(
 def _stacked_views(group: ClassGroup) -> Tuple[sj.DeviceTree, jnp.ndarray]:
     """(S_pow2, …)-stacked DeviceTree + gid table for one shape class,
     memoized on the member segments' content tokens."""
-    global _STACK_FULL_BUILDS, _STACK_INCR_UPDATES
     key = (group.cls, frozenset(v.token for v in group.views))
     with _STACK_LOCK:
         hit = _STACK_CACHE.get(key)
@@ -220,30 +248,29 @@ def _stacked_views(group: ClassGroup) -> Tuple[sj.DeviceTree, jnp.ndarray]:
             ),
             slot_tokens=tuple(v.token for v in views),
         )
+    # registry counters are atomic on their own (stack_stats feeds
+    # exact-count test assertions; racing cache-missers each count)
+    (_C_STACK_INCR if incremental else _C_STACK_FULL).inc()
     with _STACK_LOCK:
-        # counters inside the lock: racing cache-missers must not lose
-        # increments (stack_stats feeds exact-count test assertions)
-        if incremental:
-            _STACK_INCR_UPDATES += 1
-        else:
-            _STACK_FULL_BUILDS += 1
         same = [s for s in _STACK_CACHE if s[0] == group.cls]
         for stale in same[:-1]:  # keep only the most recent predecessor
             del _STACK_CACHE[stale]
         _STACK_CACHE[key] = entry
         while len(_STACK_CACHE) > _STACK_CACHE_MAX:
             _STACK_CACHE.popitem(last=False)
+        _G_STACK_CACHE.set(len(_STACK_CACHE))
     return entry.stacked, entry.gids
 
 
 def _dispatch_stacked(stacked, gids, q, rb, k: int, stack_size: int, cls):
-    global _DISPATCHES, _TRAVERSAL_DISPATCHES
-    _DISPATCHES += 1
-    _TRAVERSAL_DISPATCHES += 1
-    _SIGNATURES.add(
-        (cls, int(gids.shape[0]), int(q.shape[0]), k, str(q.dtype))
-    )
-    return sj.constrained_knn_stacked(stacked, gids, q, rb, k, stack_size)
+    _C_TRAVERSAL.inc()
+    with _SIG_LOCK:
+        _SIGNATURES.add(
+            (cls, int(gids.shape[0]), int(q.shape[0]), k, str(q.dtype))
+        )
+        _G_SIGNATURES.set(len(_SIGNATURES))
+    with obs.span("engine.dispatch"):
+        return sj.constrained_knn_stacked(stacked, gids, q, rb, k, stack_size)
 
 
 # -- executor ----------------------------------------------------------------
@@ -259,62 +286,108 @@ def execute(snapshot, queries, spec: QuerySpec) -> EngineResult:
             "snapshot search is float32-only; QuerySpec.dtype overrides "
             f"apply to search_tree (got {jnp.dtype(spec.dtype).name})"
         )
+    qt = obs.trace.current_query_trace()
+    # an active QueryTrace wants the paper metrics even when the caller
+    # did not ask for them on the result
+    want_stats = spec.return_visits or qt is not None
     q_host = np.asarray(queries).reshape(-1, snapshot.dim)
     nq = q_host.shape[0]
+    if qt is not None:
+        qt.set_metric("n_live", snapshot.n_live)
+        qt.set_metric("n_segments", len(snapshot.segments))
     if snapshot.n_live == 0:
         # all points tombstoned (or never inserted): answer on the host,
         # zero device dispatches
+        zeros = np.zeros(nq, np.int32)
+        if qt is not None:
+            qt.set_metric("n_classes", 0)
+            qt.set_metric("delta_candidates", 0)
+            qt.set_metric("nodes_visited", zeros)
+            qt.set_metric("leaves_scanned", zeros)
+            qt.set_metric("candidates_evaluated", zeros)
         return EngineResult(
             gids=np.full((nq, k), -1, np.int32),
             distances=np.full((nq, k), np.inf, np.float32),
-            nodes_visited=np.zeros(nq, np.int32)
-            if spec.return_visits
-            else None,
+            nodes_visited=zeros if spec.return_visits else None,
+            leaves_scanned=zeros if spec.return_visits else None,
+            points_examined=zeros if spec.return_visits else None,
         )
     dtype = jnp.dtype(spec.dtype)
     q = jnp.asarray(q_host, dtype)
     rb = jnp.broadcast_to(jnp.asarray(spec.radius, dtype), (nq,))
 
-    global _DISPATCHES
     parts: List[Tuple[jnp.ndarray, jnp.ndarray]] = []
-    visits = None
-    for group in plan(snapshot):
-        stacked, gids = _stacked_views(group)
+    visits = leaves = cands = None
+    with obs.span("engine.plan"):
+        groups = plan(snapshot)
+    for group in groups:
+        with obs.span("engine.stack"):
+            stacked, gids = _stacked_views(group)
         res = _dispatch_stacked(
             stacked, gids, q, rb, k, group.cls.stack_size, group.cls
         )
         parts.append((res.distances, res.gids))
-        if spec.return_visits:
+        if want_stats:
             # each pow2-padding dummy contributes exactly one root visit
-            # per query; subtract it so accounting matches the real trees
+            # per query; subtract it so accounting matches the real
+            # trees. Leaves/candidates need no correction: the dummy's
+            # only leaf is empty, so it scans nothing
             n_pad = shapes.next_pow2(len(group.views)) - len(group.views)
             gv = res.nodes_visited - n_pad
             visits = gv if visits is None else visits + gv
+            lv, pe = res.leaves_visited, res.points_examined
+            leaves = lv if leaves is None else leaves + lv
+            cands = pe if cands is None else cands + pe
+    delta_cands = 0
     if snapshot.delta_n_live > 0:
         from repro.index import delta as delta_mod
 
-        _DISPATCHES += 1
+        _C_DELTA.inc()
         # degenerate-class dispatch: the fused kernel streams the arena
         # once, selects in-kernel, and returns (Q, k) already in the
         # sorted-merge convention — no reshaping before the fold
-        dd, dg = delta_mod.search(
-            snapshot.delta_points, snapshot.delta_gids, q, k, rb
-        )
+        with obs.span("engine.delta"):
+            dd, dg = delta_mod.search(
+                snapshot.delta_points, snapshot.delta_gids, q, k, rb
+            )
         parts.append((dd, dg))
+        # the arena scan evaluates every live slot's distance per query
+        delta_cands = int(snapshot.delta_n_live)
 
-    d, g = qmerge.merge_parts(parts, k)
-    # materialize on the host so both execute() paths (and therefore
-    # Datastore.search) honor the declared np.ndarray contract
-    return EngineResult(
-        gids=np.asarray(g, np.int32),
-        distances=np.asarray(d, np.float32),
-        nodes_visited=(
+    with obs.span("engine.merge"):
+        d, g = qmerge.merge_parts(parts, k)
+        # materialize on the host so both execute() paths (and therefore
+        # Datastore.search) honor the declared np.ndarray contract
+        g_host = np.asarray(g, np.int32)
+        d_host = np.asarray(d, np.float32)
+    if want_stats:
+        visits = (
             np.asarray(visits, np.int32)
             if visits is not None
             else np.zeros(nq, np.int32)
         )
-        if spec.return_visits
-        else None,
+        leaves = (
+            np.asarray(leaves, np.int32)
+            if leaves is not None
+            else np.zeros(nq, np.int32)
+        )
+        cands = (
+            np.asarray(cands, np.int64)
+            if cands is not None
+            else np.zeros(nq, np.int64)
+        ) + delta_cands
+        if qt is not None:
+            qt.set_metric("n_classes", len(groups))
+            qt.set_metric("delta_candidates", delta_cands)
+            qt.set_metric("nodes_visited", visits)
+            qt.set_metric("leaves_scanned", leaves)
+            qt.set_metric("candidates_evaluated", cands)
+    return EngineResult(
+        gids=g_host,
+        distances=d_host,
+        nodes_visited=visits if spec.return_visits else None,
+        leaves_scanned=leaves if spec.return_visits else None,
+        points_examined=cands if spec.return_visits else None,
     )
 
 
@@ -335,4 +408,6 @@ def search_tree(tree, queries, spec: QuerySpec) -> sj.KnnResult:
         indices=res.gids,
         distances=res.distances,
         nodes_visited=res.nodes_visited,
+        leaves_visited=res.leaves_visited,
+        points_examined=res.points_examined,
     )

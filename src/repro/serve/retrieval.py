@@ -25,6 +25,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro import obs
 from repro.core import TreeSpec
 from repro.index import StreamingConfig, StreamingIndex
 from repro.query import QuerySpec
@@ -107,12 +108,18 @@ class Datastore:
         the unified query engine (one snapshot, one engine call)."""
         from repro.query import engine as qengine
 
-        return qengine.execute(self.index.snapshot(), queries, spec)
+        if obs.REGISTRY.enabled:
+            obs.REGISTRY.counter("serve.queries").inc(
+                int(np.asarray(queries).reshape(-1, self.index.config.dim).shape[0])
+            )
+        with obs.span("serve.search"):
+            return qengine.execute(self.index.snapshot(), queries, spec)
 
     def lookup(self, queries: np.ndarray, k: int, r: float):
         """Constrained NN over the live datastore. Returns (token values
         (Q, k), distances (Q, k), valid mask)."""
-        res = self.search(queries, QuerySpec(k=k, radius=r))
+        with obs.span("serve.lookup"):
+            res = self.search(queries, QuerySpec(k=k, radius=r))
         idx = np.asarray(res.gids, np.int64)
         dist = np.asarray(res.distances, np.float32)
         # a gid at/past _n is a point whose token is not published yet (a

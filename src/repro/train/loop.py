@@ -23,6 +23,7 @@ import numpy as np
 
 import jax
 
+from repro import obs
 from repro.data import tokens as data_lib
 from repro.models import model as model_lib
 from repro.models.config import ModelConfig
@@ -99,10 +100,21 @@ def train(
         dt = time.perf_counter() - t0
         if not np.isfinite(loss):
             raise FloatingPointError(f"non-finite loss at step {step}")
+        # structured twin of the log_fn strings: the same quantities,
+        # queryable from the registry / BENCH_obs.json instead of parsed
+        # out of stdout
+        if obs.REGISTRY.enabled:
+            obs.REGISTRY.counter("train.steps").inc()
+            obs.REGISTRY.gauge("train.loss").set(loss)
+            obs.REGISTRY.gauge(
+                "train.grad_norm"
+            ).set(float(metrics["grad_norm"]))
+            obs.REGISTRY.histogram("train.step_seconds", unit="s").observe(dt)
         if len(step_times) >= 5:
             med = float(np.median(step_times[-20:]))
             if dt > loop.straggler_factor * med:
                 stragglers += 1
+                obs.REGISTRY.counter("train.stragglers").inc()
                 log_fn(
                     f"[straggler] step {step}: {dt:.2f}s vs median {med:.2f}s"
                 )

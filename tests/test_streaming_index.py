@@ -205,6 +205,65 @@ def test_delete_idempotent_and_missing():
     assert idx.n_live == 7
 
 
+def test_stats_counter_invariants():
+    """Registry-backed lifetime counters obey the LSM bookkeeping
+    identities under a randomized insert/delete/seal/merge workload."""
+    rng = np.random.default_rng(21)
+    cap, factor = 32, 3
+    idx = make_index(2, cap=cap, factor=factor)
+    n_added = n_deleted = 0
+    for step in range(10):
+        m = int(rng.integers(10, 70))
+        idx.add(rng.standard_normal((m, 2)))
+        n_added += m
+        if step % 2:
+            live = idx.live_gids()
+            take = len(live) // 5
+            if take:
+                n_deleted += idx.delete(
+                    rng.choice(live, size=take, replace=False)
+                )
+    st = idx.stats()
+    assert st["inserts"] == n_added
+    assert st["deletes"] == n_deleted
+    assert st["n_live"] == n_added - n_deleted
+    # every seal drains at most one arena's worth of live points, and
+    # everything sealed was inserted first
+    assert st["sealed_points"] <= st["seals"] * cap
+    assert st["sealed_points"] <= st["inserts"]
+    # every inserted point is either sealed, still in the arena, or was
+    # tombstoned in the arena and dropped at a seal — so the ledger
+    # never over-counts
+    assert st["inserts"] >= st["sealed_points"] + st["delta_fill"]
+    # a tiered merge folds >= factor inputs, a purge rebuild exactly one
+    assert st["segments_merged"] >= (
+        factor * st["tiered_merges"] + st["purge_merges"]
+    )
+    assert 0.0 <= st["tombstone_garbage_ratio"] <= 1.0
+    # registry gauges mirror the live stats
+    assert idx._g_n_segments.value == st["n_segments"]
+    assert idx._g_delta_fill.value == st["delta_fill"]
+    assert idx._g_version.value == st["version"]
+
+    seals_before = st["seals"]
+    idx.flush()
+    st2 = idx.stats()
+    assert st2["delta_fill"] == 0
+    assert st2["seals"] >= seals_before
+    assert st2["sealed_points"] <= st2["inserts"]
+
+    if st2["tombstone_garbage_ratio"] == 0.0:
+        idx.delete(idx.live_gids()[:10])
+        st2 = idx.stats()
+    assert st2["tombstone_garbage_ratio"] > 0.0
+    idx.compact()
+    st3 = idx.stats()
+    assert st3["compactions"] == st2["compactions"] + 1
+    assert st3["tombstone_garbage_ratio"] == 0.0
+    assert idx._g_garbage.value == 0.0
+    check_oracle(idx, rng.standard_normal((4, 2)), k=5, r=1.5)
+
+
 def test_datastore_add_delete_lookup():
     rng = np.random.default_rng(5)
     keys = rng.standard_normal((200, 4)).astype(np.float32)
