@@ -8,7 +8,11 @@ Checks every ``BENCH_<section>.json`` in the output directory
   * ``BENCH_obs.json``: the three registry sections are present,
     counters are non-negative integers, gauges are numbers, and every
     histogram has a ``unit`` plus consistent ``count`` / sparse
-    ``buckets`` pairs (the mergeability contract).
+    ``buckets`` pairs (the mergeability contract); the ``autotune``
+    section is present and each cached block plan satisfies the
+    kernels' block constraints (bm a multiple of 8, bn a multiple of
+    128 — resolved geometry may clamp a pow2 candidate to the padded
+    problem — a valid ``source``, numeric cost terms).
 
 Exits nonzero listing every violation, so CI fails loudly when a bench
 section silently stops emitting or the artifact schema drifts.
@@ -91,6 +95,61 @@ def check_obs(path: str, payload: dict) -> List[str]:
         ):
             errs.append(
                 f"{path}: histogram {key} bucket counts != count={h['count']}"
+            )
+    errs.extend(check_autotune(path, payload))
+    return errs
+
+
+def check_autotune(path: str, payload: dict) -> List[str]:
+    """The `autotune` section: every cached plan of the run, each one a
+    block geometry the kernels would actually accept."""
+    errs = []
+    at = payload.get("autotune")
+    if not isinstance(at, dict):
+        return [f"{path}: missing 'autotune' object"]
+    for key, plan in at.items():
+        if not isinstance(plan, dict):
+            errs.append(f"{path}: autotune[{key}] not an object")
+            continue
+        for field in ("bm", "bn", "bk", "blocks"):
+            v = plan.get(field)
+            if not isinstance(v, int) or isinstance(v, bool) or v <= 0:
+                errs.append(
+                    f"{path}: autotune[{key}].{field}={v!r} "
+                    f"not a positive int"
+                )
+        bm, bn = plan.get("bm"), plan.get("bn")
+        if isinstance(bm, int) and bm % 8:
+            errs.append(f"{path}: autotune[{key}].bm={bm} not a multiple of 8")
+        # candidate bn values are pow2 but the plan records the RESOLVED
+        # geometry, clamped to the 128-padded problem — a non-pow2
+        # multiple of 128 when N pads to one (e.g. bn=384 at N=384)
+        if isinstance(bn, int) and bn > 0 and bn % 128:
+            errs.append(
+                f"{path}: autotune[{key}].bn={bn} not a multiple of 128"
+            )
+        grid = plan.get("grid")
+        if not (
+            isinstance(grid, list)
+            and grid
+            and all(isinstance(g, int) and g > 0 for g in grid)
+        ):
+            errs.append(f"{path}: autotune[{key}].grid={grid!r} bad")
+        for field in ("padded_flops", "stream_bytes", "vmem_bytes", "pred_us"):
+            if not _num(plan.get(field)) or plan.get(field) < 0:
+                errs.append(
+                    f"{path}: autotune[{key}].{field}={plan.get(field)!r} "
+                    f"not a non-negative number"
+                )
+        if plan.get("source") not in ("env", "analytic", "measured"):
+            errs.append(
+                f"{path}: autotune[{key}].source={plan.get('source')!r} "
+                f"not one of env/analytic/measured"
+            )
+        if "measured_us" in plan and not _num(plan["measured_us"]):
+            errs.append(
+                f"{path}: autotune[{key}].measured_us="
+                f"{plan['measured_us']!r} not a number"
             )
     return errs
 

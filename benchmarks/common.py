@@ -124,7 +124,10 @@ def write_obs_json(out_dir: Optional[str] = None) -> str:
     section files: $BENCH_OUT or ``bench_out``). Every bench run
     produces this alongside its sections, so the counters behind the
     numbers — dispatches, kernel bytes/FLOPs, seal/merge activity —
-    ship with the timings they explain."""
+    ship with the timings they explain. The autotuner's cached block
+    plans ride along as a top-level ``autotune`` section (keyed
+    kernel/shape-class/k/dtype/backend), so every artifact records
+    which block geometry produced its numbers."""
     from repro import obs
 
     out_dir = out_dir or os.environ.get("BENCH_OUT", "bench_out")

@@ -26,7 +26,7 @@ from repro.kernels import ops, ref
 from repro.kernels import pairwise_l2 as _pw
 from repro.kernels import topk_l2 as _tk
 
-from .common import emit, env_caps, timed, write_bench_json
+from .common import emit, env_caps, radius_for, timed, write_bench_json
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -111,6 +111,103 @@ def run(full: bool = False):
             f"cpu_ref_us;tpu_memory_us={bytes_ / HBM_BW * 1e6:.1f};"
             f"ai={flops / bytes_:.2f}flops_per_byte;bound=memory",
         )
+    # ---- fused two-phase traversal vs the classic in-loop jnp leaves ----
+    # Same tree, same queries, both paths bit-exact: phase 1 collects the
+    # pruned leaf frontier, phase 2 evaluates the gathered candidates
+    # with the leaf_topk_l2 kernel instead of evaluating every leaf
+    # inside the traversal loop.
+    import jax
+
+    from repro.core import build_host as _bh
+    from repro.core import search_jax as _sj
+    from repro.query import shapes as _shapes
+
+    m, n = _capped(64, 8192)
+    d, k = 16, 8
+    pts = rng.standard_normal((n, d)).astype(np.float32)
+    tree = _bh.build(pts)
+    dts = jax.tree_util.tree_map(
+        lambda x: x[None], _sj.device_tree(tree)
+    )
+    tgids = jnp.arange(tree.n_points, dtype=jnp.int32)[None]
+    qs = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+    rb = jnp.full((m,), jnp.float32(radius_for(pts, frac=0.25)))
+    ss = _shapes.padded_stack_size(_sj.max_depth(tree))
+
+    def _classic():
+        return jax.block_until_ready(
+            _sj.constrained_knn_stacked(dts, tgids, qs, rb, k, ss).distances
+        )
+
+    _classic()  # compile
+    _, dt_c = timed(_classic, repeat=3)
+
+    # cap = total leaf count, so the frontier can never overflow and the
+    # timing below always measures the fused path, not the fallback
+    fcap = int((np.asarray(tree.leaf_of_node) >= 0).sum())
+
+    def _fused():
+        res = _sj.constrained_knn_stacked_fused(
+            dts, tgids, qs, rb, k, ss, frontier_cap=fcap
+        )
+        return jax.block_until_ready(res.distances) if res is not None else None
+
+    if _fused() is None:  # frontier-cap overflow: record, skip timing
+        emit(
+            f"traversal/fused/{n}x{m}/k={k}",
+            dt_c * 1e6,
+            "frontier_overflow_fell_back_to_jnp_leaf",
+        )
+    else:
+        _, dt_f = timed(_fused, repeat=3)
+        # on CPU the leaf kernel runs in interpret mode (Python), so the
+        # wall ratio here tracks correctness-path overhead, not the TPU
+        # speedup — the TPU story is the analytic plan rows below
+        emit(
+            f"traversal/fused/{n}x{m}/k={k}",
+            dt_f * 1e6,
+            f"cpu_interpret_wall;jnp_leaf_us={dt_c * 1e6:.1f};"
+            f"wall_ratio_vs_jnp_leaf={dt_c / dt_f:.2f}x",
+        )
+
+    # ---- autotuner: analytic choice, then measured refinement ----------
+    from repro.kernels import autotune as _at
+
+    mm, nn = _capped(256, 4096)
+    dd, kk = 64, 8
+    qa = jnp.asarray(rng.standard_normal((mm, dd)), jnp.float32)
+    pa = jnp.asarray(rng.standard_normal((nn, dd)), jnp.float32)
+    ga = jnp.arange(nn, dtype=jnp.int32)
+
+    def _measure(plan):
+        return _at.timed(
+            lambda: ops.topk_l2(
+                qa, pa, ga, np.inf, kk,
+                bm=plan["bm"], bn=plan["bn"], bk=plan["bk"],
+            )
+        )
+
+    plan = _at.choose_plan(
+        "topk_l2", mm, nn, dd, kk, measure=_measure, trials=2
+    )
+    emit(
+        f"autotune/topk_l2/{mm}x{nn}x{dd}/k={kk}",
+        plan.get("measured_us", plan["score"] * 1e6),
+        f"bm={plan['bm']};bn={plan['bn']};bk={plan['bk']};"
+        f"blocks={plan['blocks']};pred_us={plan['score'] * 1e6:.1f};"
+        f"source={plan['source']}",
+        unit="us_per_call",
+    )
+    cc = 1024  # representative gathered-frontier width (F_eff × leaf)
+    lplan = _at.choose_plan("leaf_topk_l2", m, cc, d, k)
+    emit(
+        f"autotune/leaf_topk_l2/{m}x{cc}x{d}/k={k}",
+        lplan["score"] * 1e6,
+        f"bm={lplan['bm']};bn={lplan['bn']};bk={lplan['bk']};"
+        f"blocks={lplan['blocks']};source={lplan['source']}",
+        unit="pred_us",
+    )
+
     # interpret-mode correctness spot checks ride along: the REAL Pallas
     # programs (pairwise + fused top-k) vs their oracles
     q = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)

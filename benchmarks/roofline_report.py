@@ -75,6 +75,14 @@ def kernel_accounting_rows() -> dict:
     return rows
 
 
+def autotune_rows() -> dict:
+    """The block plans the autotuner resolved in this process — the
+    geometry behind every `roofline/observed/*` row above."""
+    from repro.kernels import autotune
+
+    return autotune.decisions()
+
+
 def run(full: bool = False):
     for kernel, t in sorted(kernel_accounting_rows().items()):
         emit(
@@ -83,6 +91,19 @@ def run(full: bool = False):
             f"hbm_bytes={t['hbm_bytes']};flops={t['flops']};"
             f"ai={t['ai']:.2f}flops_per_byte;tpu_bound={t['tpu_bound']}",
             unit="calls",
+        )
+    for key, plan in sorted(autotune_rows().items()):
+        emit(
+            f"roofline/autotune/{key}",
+            plan["pred_us"],
+            f"bm={plan['bm']};bn={plan['bn']};bk={plan['bk']};"
+            f"blocks={plan['blocks']};source={plan['source']}"
+            + (
+                f";measured_us={plan['measured_us']:.2f}"
+                if "measured_us" in plan
+                else ""
+            ),
+            unit="pred_us",
         )
     if not ART.exists():
         emit("roofline/dryrun", 0.0, "no_artifacts_yet_run_launch.dryrun")

@@ -177,6 +177,45 @@ def constrained_knn(
     return _stats_merge(stats, _finalize(heap, k))
 
 
+def leaf_frontier(tree: Tree, q: np.ndarray, k: int, r: float) -> List[int]:
+    """Oracle for the fused traversal's phase 1: the leaf RANKS
+    (`tree.leaf_of_node`) of every scanned non-empty leaf of
+    `constrained_knn` (prune="or"), in DFS visit order — exactly the
+    list `search_jax._collect_one` records on device."""
+    q = np.asarray(q, dtype=np.float64)
+    heap: List = []
+    frontier: List[int] = []
+
+    def d_s() -> float:
+        return -heap[0][0] if len(heap) >= k else np.inf
+
+    def visit(node: int, d_parent: float):
+        dc = float(np.linalg.norm(q - tree.center[node]))
+        d_n = max(d_parent, dc - float(tree.radius[node]))
+        if d_n >= d_s() or d_n > r:
+            return
+        if tree.child_l[node] < 0:
+            d, idx = _leaf_scan(tree, node, q)
+            if d.shape[0]:
+                frontier.append(int(tree.leaf_of_node[node]))
+            for di, ii in zip(d, idx):
+                if di <= r and di < d_s():
+                    heapq.heappush(heap, (-di, int(ii)))
+                    if len(heap) > k:
+                        heapq.heappop(heap)
+            return
+        l, rr = int(tree.child_l[node]), int(tree.child_r[node])
+        dl = float(np.linalg.norm(q - tree.center[l]))
+        dr = float(np.linalg.norm(q - tree.center[rr]))
+        order = ((dl, l), (dr, rr)) if dl <= dr else ((dr, rr), (dl, l))
+        for d_child, child in order:
+            if d_child <= float(tree.radius[child]) + r:
+                visit(child, d_n)
+
+    visit(0, 0.0)
+    return frontier
+
+
 def knn_then_filter(tree: Tree, q: np.ndarray, k: int, r: float) -> SearchStats:
     """The baseline the paper compares against in Table 2: run the plain
     Liu et al. KNN search (no range pruning), then filter by the range."""

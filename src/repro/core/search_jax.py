@@ -18,6 +18,7 @@ two, and expansion only descends, so the stack never exceeds depth+2.
 from __future__ import annotations
 
 import functools
+import os
 from typing import NamedTuple, Optional
 
 import numpy as np
@@ -26,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 import repro.query.merge as qmerge
+from repro.kernels import topk_l2 as _tk
 
 from .types import Tree
 
@@ -69,13 +71,42 @@ class KnnResult(NamedTuple):
     points_examined: Optional[jax.Array] = None   # (Q,)
 
 
+def _leaf_sq(pts, q):
+    """Squared distances of a leaf's points to the query, computed over
+    the feature dim zero-padded to the kernel's 128-lane width. The
+    padding lanes are exact no-ops, but they pin the REDUCTION SHAPE:
+    for tiny d (e.g. d=2) XLA otherwise contracts the sum into an FMA
+    with different rounding than `leaf_topk_l2`'s in-kernel Σ(q-c)²,
+    breaking the fused path's bit-parity with this loop."""
+    d = pts.shape[-1]
+    dp = -(-d // 128) * 128
+    if dp != d:
+        pts = jnp.pad(pts, [(0, 0)] * (pts.ndim - 1) + [(0, dp - d)])
+        q = jnp.pad(q, (0, dp - d))
+    return ((pts - q) ** 2).sum(-1)
+
+
 def _traverse_one(dt: DeviceTree, q, r, k: int, stack_size: int):
-    """Single-query constrained-KNN traversal (vmapped by callers)."""
+    """Single-query constrained-KNN traversal (vmapped by callers).
+
+    Leaf evaluation runs entirely in SQUARED distances: the per-leaf
+    full-width `sqrt` the old path paid on every visited leaf is gone —
+    the only sqrt inside the loop is one scalar per iteration, turning
+    the carried k-th best back into the euclidean `d_s` the node-level
+    pruning (and the host oracle) compares against. The radius gate
+    uses the conservatively-squared `radius_sq_upper(r)` in-loop and is
+    refined exactly (`sqrt(sq) <= r`) on the k survivors after the
+    loop; conservative false admits rank strictly after every true
+    candidate in the squared domain, so they only ever occupy trailing
+    slots and the refinement removes them without reordering anything
+    (see `kernels/topk_l2.py` for the full argument).
+    """
     inf = jnp.asarray(jnp.inf, dt.center.dtype)
+    r2 = _tk.radius_sq_upper(r)
 
     stack_n = jnp.zeros(stack_size, jnp.int32)
     stack_b = jnp.zeros(stack_size, dt.center.dtype)
-    best_d = jnp.full((k,), inf, dt.center.dtype)
+    best_sq = jnp.full((k,), inf, dt.center.dtype)
     best_i = jnp.full((k,), -1, jnp.int32)
 
     def cond(state):
@@ -83,7 +114,7 @@ def _traverse_one(dt: DeviceTree, q, r, k: int, stack_size: int):
         return sp > 0
 
     def body(state):
-        sp, stack_n, stack_b, best_d, best_i, visits, leaves, cands = state
+        sp, stack_n, stack_b, best_sq, best_i, visits, leaves, cands = state
         sp = sp - 1
         node = stack_n[sp]
         d_par = stack_b[sp]
@@ -91,7 +122,9 @@ def _traverse_one(dt: DeviceTree, q, r, k: int, stack_size: int):
 
         dc = jnp.linalg.norm(q - dt.center[node])
         d_n = jnp.maximum(d_par, dc - dt.radius[node])
-        d_s = best_d[k - 1]
+        # one scalar sqrt recovers the euclidean k-th best: node pruning
+        # stays in the euclidean domain, bit-identical to the host oracle
+        d_s = jnp.sqrt(best_sq[k - 1])
         prune = (d_n >= d_s) | (d_n > r)
         is_leaf = dt.child_l[node] < 0
 
@@ -102,15 +135,15 @@ def _traverse_one(dt: DeviceTree, q, r, k: int, stack_size: int):
         rank = jnp.maximum(dt.leaf_of_node[node], 0)
         pts = dt.leaf_points[rank]            # (cap, d)
         li = dt.leaf_index[rank]              # (cap,)
-        dl = jnp.sqrt(jnp.maximum(((pts - q) ** 2).sum(-1), 0.0))
-        ok = (li >= 0) & (dl <= r) & (dl < d_s)
-        dl = jnp.where(ok, dl, inf)
+        sql = jnp.maximum(_leaf_sq(pts, q), 0.0)
+        ok = (li >= 0) & (sql <= r2) & (sql < best_sq[k - 1])
+        sql = jnp.where(ok, sql, inf)
         li = jnp.where(ok, li, -1)
-        ld, lidx = qmerge.topk_sorted(dl, li, k)
-        new_d, new_i = qmerge.merge_sorted(best_d, best_i, ld, lidx)
-        new_d, new_i = new_d[:k], new_i[:k]
+        ld, lidx = qmerge.topk_sorted(sql, li, k)
+        new_sq, new_i = qmerge.merge_sorted(best_sq, best_i, ld, lidx)
+        new_sq, new_i = new_sq[:k], new_i[:k]
         take_leaf = is_leaf & ~prune
-        best_d = jnp.where(take_leaf, new_d, best_d)
+        best_sq = jnp.where(take_leaf, new_sq, best_sq)
         best_i = jnp.where(take_leaf, new_i, best_i)
         # paper accounting, host-oracle parity: leaves_visited counts a
         # scanned leaf holding at least one live point (so the stacked
@@ -153,21 +186,27 @@ def _traverse_one(dt: DeviceTree, q, r, k: int, stack_size: int):
             jnp.where(push_near == 1, d_n, stack_b[idx1])
         )
         sp2 = sp1 + push_near
-        return (sp2, stack_n, stack_b, best_d, best_i, visits, leaves, cands)
+        return (sp2, stack_n, stack_b, best_sq, best_i, visits, leaves, cands)
 
     state = (
         jnp.int32(1),
         stack_n,
         stack_b,
-        best_d,
+        best_sq,
         best_i,
         jnp.int32(0),
         jnp.int32(0),
         jnp.int32(0),
     )
-    (sp, _, _, best_d, best_i, visits, leaves, cands) = jax.lax.while_loop(
+    (sp, _, _, best_sq, best_i, visits, leaves, cands) = jax.lax.while_loop(
         cond, body, state
     )
+    # exact radius refinement: sqrt only the k survivors, drop the
+    # (trailing) conservative false admits
+    best_d = jnp.sqrt(best_sq)
+    okf = best_d <= r
+    best_d = jnp.where(okf, best_d, inf)
+    best_i = jnp.where(okf, best_i, -1)
     return best_d, best_i, visits, leaves, cands
 
 
@@ -240,6 +279,244 @@ def constrained_knn_stacked(
 
     bd, gg, v, lv, pe = jax.vmap(per_segment)(dts, gids)  # (S, Q, …)
     d, g = qmerge.merge_parts([(bd[s], gg[s]) for s in range(bd.shape[0])], k)
+    return StackedResult(
+        gids=g,
+        distances=d,
+        nodes_visited=v.sum(0),
+        leaves_visited=lv.sum(0),
+        points_examined=pe.sum(0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Two-phase fused traversal: collect the leaf frontier with the same
+# while_loop pruning (phase 1), then evaluate every surviving leaf's
+# candidates in ONE batched Pallas kernel launch (phase 2). Exactness:
+# the classic traversal's incremental k-best equals the global top-k of
+# all evaluated-leaf candidates keyed by (squared distance, DFS
+# insertion order) — the exact key `leaf_topk_l2` selects on — so both
+# paths produce bit-identical results AND bit-identical paper-metric
+# counts (phase 1 runs the same pruning, so it visits the same nodes).
+# ---------------------------------------------------------------------------
+
+FRONTIER_CAP_DEFAULT = 64
+
+
+def frontier_cap_default() -> int:
+    """Static per-query leaf-frontier capacity of the fused path
+    (`REPRO_FRONTIER_CAP` overrides). Queries whose pruned frontier
+    exceeds it fall back to the classic in-loop evaluation — exact
+    either way, the cap only bounds the phase-2 gather footprint."""
+    return int(os.environ.get("REPRO_FRONTIER_CAP", FRONTIER_CAP_DEFAULT))
+
+
+def _collect_one(dt: DeviceTree, q, r, k: int, stack_size: int, fcap: int):
+    """Phase 1: the `_traverse_one` loop with the SAME pruning state
+    evolution (squared k-best values, one scalar sqrt per iteration)
+    but no id bookkeeping — instead it records the rank of every
+    scanned non-empty leaf, in DFS visit order, into a (fcap,) list.
+    `nf` keeps counting past the cap so the caller can detect
+    truncation and fall back."""
+    inf = jnp.asarray(jnp.inf, dt.center.dtype)
+    r2 = _tk.radius_sq_upper(r)
+
+    stack_n = jnp.zeros(stack_size, jnp.int32)
+    stack_b = jnp.zeros(stack_size, dt.center.dtype)
+    best_sq = jnp.full((k,), inf, dt.center.dtype)
+    frontier = jnp.full((fcap,), -1, jnp.int32)
+
+    def cond(state):
+        sp, *_ = state
+        return sp > 0
+
+    def body(state):
+        (sp, stack_n, stack_b, best_sq, frontier, nf,
+         visits, leaves, cands) = state
+        sp = sp - 1
+        node = stack_n[sp]
+        d_par = stack_b[sp]
+        visits = visits + 1
+
+        dc = jnp.linalg.norm(q - dt.center[node])
+        d_n = jnp.maximum(d_par, dc - dt.radius[node])
+        d_s = jnp.sqrt(best_sq[k - 1])
+        prune = (d_n >= d_s) | (d_n > r)
+        is_leaf = dt.child_l[node] < 0
+
+        # ---- leaf evaluation: values only (d_s parity, no ids) ----------
+        rank = jnp.maximum(dt.leaf_of_node[node], 0)
+        pts = dt.leaf_points[rank]            # (cap, d)
+        li = dt.leaf_index[rank]              # (cap,)
+        sql = jnp.maximum(_leaf_sq(pts, q), 0.0)
+        ok = (li >= 0) & (sql <= r2) & (sql < best_sq[k - 1])
+        sql = jnp.where(ok, sql, inf)
+        ld = qmerge.topk_vals(sql, k)
+        new_sq = qmerge.merge_sorted_vals(best_sq, ld)[:k]
+        take_leaf = is_leaf & ~prune
+        best_sq = jnp.where(take_leaf, new_sq, best_sq)
+
+        # paper accounting: identical to `_traverse_one`
+        n_real = (dt.leaf_index[rank] >= 0).sum().astype(jnp.int32)
+        leaves = leaves + jnp.where(take_leaf & (n_real > 0), 1, 0)
+        cands = cands + jnp.where(take_leaf, n_real, 0)
+
+        # ---- frontier recording (empty leaves contribute nothing) -------
+        record = take_leaf & (n_real > 0)
+        widx = jnp.minimum(nf, fcap - 1)
+        frontier = frontier.at[widx].set(
+            jnp.where(record & (nf < fcap), rank, frontier[widx])
+        )
+        nf = nf + jnp.where(record, 1, 0)
+
+        # ---- internal expansion (identical to `_traverse_one`) ----------
+        l = jnp.maximum(dt.child_l[node], 0)
+        rr = jnp.maximum(dt.child_r[node], 0)
+        dcl = jnp.linalg.norm(q - dt.center[l])
+        dcr = jnp.linalg.norm(q - dt.center[rr])
+        near, far = (
+            jnp.where(dcl <= dcr, l, rr),
+            jnp.where(dcl <= dcr, rr, l),
+        )
+        d_near = jnp.minimum(dcl, dcr)
+        d_far = jnp.maximum(dcl, dcr)
+        gate_near = d_near <= dt.radius[near] + r
+        gate_far = d_far <= dt.radius[far] + r
+        expand = ~is_leaf & ~prune
+        push_far = (expand & gate_far).astype(jnp.int32)
+        push_near = (expand & gate_near).astype(jnp.int32)
+        stack_n = stack_n.at[sp].set(
+            jnp.where(push_far == 1, far, stack_n[sp])
+        )
+        stack_b = stack_b.at[sp].set(
+            jnp.where(push_far == 1, d_n, stack_b[sp])
+        )
+        sp1 = sp + push_far
+        idx1 = jnp.minimum(sp1, stack_size - 1)
+        stack_n = stack_n.at[idx1].set(
+            jnp.where(push_near == 1, near, stack_n[idx1])
+        )
+        stack_b = stack_b.at[idx1].set(
+            jnp.where(push_near == 1, d_n, stack_b[idx1])
+        )
+        sp2 = sp1 + push_near
+        return (sp2, stack_n, stack_b, best_sq, frontier, nf,
+                visits, leaves, cands)
+
+    state = (
+        jnp.int32(1), stack_n, stack_b, best_sq, frontier,
+        jnp.int32(0), jnp.int32(0), jnp.int32(0), jnp.int32(0),
+    )
+    (_, _, _, _, frontier, nf, visits, leaves, cands) = jax.lax.while_loop(
+        cond, body, state
+    )
+    return frontier, nf, visits, leaves, cands
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "stack_size", "frontier_cap")
+)
+def _collect_frontier_stacked(
+    dts: DeviceTree, queries, r, k: int, stack_size: int, frontier_cap: int
+):
+    """Phase 1 over all S stacked segments × Q queries: per-(s, q)
+    frontier leaf ranks (DFS order, -1 padded), true frontier sizes,
+    and the classic traversal's paper-metric counts."""
+    r = jnp.broadcast_to(jnp.asarray(r, dts.center.dtype), queries.shape[:1])
+
+    def per_segment(dt):
+        return jax.vmap(
+            lambda q, ri: _collect_one(dt, q, ri, k, stack_size, frontier_cap)
+        )(queries, r)
+
+    return jax.vmap(per_segment)(dts)  # each (S, Q, …)
+
+
+@jax.jit
+def _gather_frontier(dts: DeviceTree, gids, queries, r, frontier):
+    """Phase 2 gather: pull each (segment, query) row's frontier leaves
+    into a private padded candidate matrix, local ids mapped to global
+    gids (holes/dead slots → -1)."""
+    s, qn, f = frontier.shape
+    n = gids.shape[1]
+
+    def per_seg(lp, li, g, fr):
+        rc = jnp.clip(fr, 0, lp.shape[0] - 1)       # (Q, F)
+        cpts = lp[rc]                                # (Q, F, cap, d)
+        cli = li[rc]                                 # (Q, F, cap)
+        live = (cli >= 0) & (fr >= 0)[..., None]
+        cg = jnp.where(live, g[jnp.clip(cli, 0, n - 1)], -1)
+        cap, dim = lp.shape[1], lp.shape[2]
+        return (
+            cpts.reshape(qn, f * cap, dim),
+            cg.reshape(qn, f * cap),
+        )
+
+    cpts, cg = jax.vmap(per_seg)(
+        dts.leaf_points, dts.leaf_index, gids, frontier
+    )
+    dim = queries.shape[1]
+    qrows = jnp.broadcast_to(queries[None], (s, qn, dim)).reshape(-1, dim)
+    rb = jnp.broadcast_to(jnp.asarray(r, queries.dtype), (qn,))
+    rrows = jnp.broadcast_to(rb[None], (s, qn)).reshape(-1)
+    c = cpts.shape[2]
+    return qrows, cpts.reshape(s * qn, c, dim), cg.reshape(s * qn, c), rrows
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _merge_segments(dd, gg, k: int):
+    """Fold the S per-segment sorted k-bests — same merge the classic
+    stacked path uses, so cross-segment tie-breaks are identical."""
+    return qmerge.merge_parts(
+        [(dd[s], gg[s]) for s in range(dd.shape[0])], k
+    )
+
+
+def constrained_knn_stacked_fused(
+    dts: DeviceTree,
+    gids: jax.Array,
+    queries: jax.Array,
+    r,
+    k: int,
+    stack_size: int,
+    frontier_cap: int | None = None,
+) -> StackedResult | None:
+    """Two-phase fused traversal over S stacked segments: collect the
+    pruned leaf frontier (phase 1), evaluate every surviving candidate
+    with one `leaf_topk_l2` launch (phase 2), merge across segments on
+    device. Bit-identical to `constrained_knn_stacked` — results AND
+    nodes/leaves/candidates counts.
+
+    Returns None when some query's frontier overflowed `frontier_cap`
+    (the recorded list would be truncated): the caller falls back to
+    the classic path, which is exact at any frontier size.
+    """
+    from repro.kernels import ops  # lazy: ops pulls in the obs registry
+
+    if frontier_cap is None:
+        frontier_cap = frontier_cap_default()
+    frontier, nf, v, lv, pe = _collect_frontier_stacked(
+        dts, queries, r, k, stack_size, frontier_cap
+    )
+    nf_max = int(jax.device_get(jnp.max(nf))) if nf.size else 0
+    if nf_max > frontier_cap:
+        return None
+    # shrink the gather to the smallest pow2 class that holds the
+    # widest frontier: bounds phase-2 memory at log2(fcap) jit classes
+    f_eff = max(1, min(_tk._next_pow2(max(nf_max, 1)), frontier_cap))
+    qrows, cands, cgids, rrows = _gather_frontier(
+        dts, gids, queries, r, frontier[..., :f_eff]
+    )
+    # pin bk to cover the whole feature dim: one k-chunk per block, so
+    # the in-kernel Σ(q-c)² accumulates in a single pass — the same
+    # rounding as the traversal's in-loop `((pts-q)**2).sum(-1)`. A
+    # smaller autotuned bk would split the sum and break bit-parity;
+    # bm/bn stay tunable (they never change the arithmetic).
+    bk = _tk._round_up(max(int(queries.shape[1]), 1), 128)
+    dd, gg = ops.leaf_topk_l2(qrows, cands, cgids, rrows, k, bk=bk)
+    s, qn = frontier.shape[0], frontier.shape[1]
+    d, g = _merge_segments(
+        dd.reshape(s, qn, k), gg.reshape(s, qn, k), k
+    )
     return StackedResult(
         gids=g,
         distances=d,

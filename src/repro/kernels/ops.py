@@ -20,6 +20,26 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _tuned(kernel: str, m: int, n: int, d: int, k: int, kw: dict):
+    """Fill the block sizes the caller did NOT pin with the autotuner's
+    choice (an explicit bm/bn/bk always wins, per key — e.g. the fused
+    traversal pins bk for exactness and lets bm/bn tune). Returns the
+    chosen plan, or None when nothing needed tuning."""
+    missing = [b for b in ("bm", "bn", "bk") if b not in kw]
+    if not (m and n) or not missing:
+        return None
+    from . import autotune as _at  # lazy: autotune imports the planners
+
+    plan = _at.choose_plan(kernel, m, n, d, k)
+    for b in missing:
+        kw[b] = plan[b]
+    return plan
+
+
+def _blocks(kw: dict) -> dict:
+    return {b: kw[b] for b in ("bm", "bn", "bk") if b in kw}
+
+
 def _account(kernel: str, plan: dict) -> None:
     """Bill one launch to the registry: calls, analytic HBM bytes, and
     FLOPs per kernel — the inputs of the roofline report."""
@@ -41,12 +61,17 @@ def _concrete(*arrays) -> bool:
 def pairwise_sq_l2(q, p, **kw):
     """Blocked squared-L2 distance matrix (M, N) f32."""
     kw.setdefault("interpret", _interpret())
+    m, d = q.shape
+    n = p.shape[0]
+    _tuned("pairwise_sq_l2", m, n, d, 0, kw)
     if obs.REGISTRY.enabled and _concrete(q, p):
-        m, d = q.shape
-        n = p.shape[0]
         _account(
             "pairwise_sq_l2",
-            _pw.block_plan(m, n, d, itemsize=jnp.dtype(q.dtype).itemsize),
+            _pw.block_plan(
+                m, n, d,
+                itemsize=jnp.dtype(q.dtype).itemsize,
+                **_blocks(kw),
+            ),
         )
     return _pw.pairwise_sq_l2(q, p, **kw)
 
@@ -60,12 +85,28 @@ def topk_l2(q, p, gids, r, k, **kw):
     """Fused streaming constrained top-k: (Q, k) ascending (dist, gid)
     without ever materializing the (Q, N) distance matrix."""
     kw.setdefault("interpret", _interpret())
-    if obs.REGISTRY.enabled and _concrete(q, p, gids):
-        m, d = q.shape
-        n = p.shape[0]
-        if m and n:
-            _account("topk_l2", _tk.block_plan(m, n, d, k))
+    m, d = q.shape
+    n = p.shape[0]
+    _tuned("topk_l2", m, n, d, k, kw)
+    if obs.REGISTRY.enabled and _concrete(q, p, gids) and m and n:
+        _account("topk_l2", _tk.block_plan(m, n, d, k, **_blocks(kw)))
     return _tk.topk_l2(q, p, gids, r, k, **kw)
+
+
+def leaf_topk_l2(q, cands, cgids, r, k, **kw):
+    """Batched-candidates fused top-k: each query row scans its own
+    (C, D) candidate matrix — the phase-2 evaluator of the two-phase
+    traversal. Interpret mode on CPU runs the REAL kernel body, so
+    tier-1 exercises the exact program the TPU compiles."""
+    kw.setdefault("interpret", _interpret())
+    m, d = q.shape
+    c = cands.shape[1]
+    _tuned("leaf_topk_l2", m, c, d, k, kw)
+    if obs.REGISTRY.enabled and _concrete(q, cands, cgids) and m and c:
+        _account(
+            "leaf_topk_l2", _tk.leaf_block_plan(m, c, d, k, **_blocks(kw))
+        )
+    return _tk.leaf_topk_l2(q, cands, cgids, r, k, **kw)
 
 
 def lower_bounds(q, centers, radii, **kw):

@@ -42,9 +42,13 @@ def block_plan(
     """Resolved launch geometry + analytic cost of one pairwise call.
 
     Mirrors the clamp logic of `pairwise_sq_l2` exactly, so the wrapper
-    accounting (`ops.py`) and the roofline benchmarks
-    (`benchmarks/kernels_bench.py`) bill the same blocks/bytes/FLOPs —
-    one source of truth for what a launch costs.
+    accounting (`ops.py`), the roofline benchmarks
+    (`benchmarks/kernels_bench.py`), and the block autotuner
+    (`kernels/autotune.py`) bill the same blocks/bytes/FLOPs — one
+    source of truth for what a launch costs. `flops`/`hbm_bytes` are
+    block-independent algorithmic counts; `padded_flops`,
+    `stream_bytes` (pipeline refetch traffic) and `vmem_bytes` are the
+    block-dependent terms the autotuner ranks candidate plans on.
     """
     bm = min(bm, _round_up(m, 8))
     bn = min(bn, _round_up(n, 128))
@@ -61,6 +65,12 @@ def block_plan(
         "flops": 2 * m * n * d + 2 * (m + n) * d,
         # read q and p once, write the (M, N) f32 matrix
         "hbm_bytes": (m * d + n * d) * itemsize + m * n * 4,
+        # block-aware autotuner terms ------------------------------------
+        "padded_flops": 2 * mp * np_ * dp + 2 * (mp + np_) * dp,
+        "stream_bytes": mp * dp * itemsize * grid[1]  # q per N block
+        + np_ * dp * itemsize * grid[0]               # p per M block
+        + mp * np_ * 4,
+        "vmem_bytes": (bm * bk + bn * bk) * itemsize + bm * bn * 4,
     }
 
 

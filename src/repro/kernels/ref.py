@@ -15,12 +15,30 @@ def pairwise_sq_l2(q: jnp.ndarray, p: jnp.ndarray) -> jnp.ndarray:
     return (diff * diff).sum(-1)
 
 
+def _select_rows(sq, dl, ok, gids2d, k: int):
+    """Shared selection tail: stable-argsort each row by the SQUARED
+    key (masked lanes +inf) — the kernels' squared-domain selection
+    order — then report euclidean distances with (+inf, -1) fill."""
+    key = jnp.where(ok, sq, jnp.inf)
+    d = jnp.where(ok, dl, jnp.inf)
+    kk = min(k, int(sq.shape[1]))
+    order = jnp.argsort(key, axis=1)[:, :kk]
+    dd = jnp.take_along_axis(d, order, axis=1)
+    gg = jnp.take_along_axis(gids2d, order, axis=1)
+    gg = jnp.where(jnp.isinf(dd), -1, gg)
+    if kk < k:
+        pad = ((0, 0), (0, k - kk))
+        dd = jnp.pad(dd, pad, constant_values=jnp.inf)
+        gg = jnp.pad(gg, pad, constant_values=-1)
+    return dd, gg
+
+
 def topk_l2(q, p, gids, r, k: int):
     """Constrained top-k oracle: the UNFUSED path the kernel replaces —
     materialize the full (Q, N) distance matrix, mask, stable-argsort
-    every row, slice k. Exact reference for ordering (ties resolve to
-    the lower slot, the `query/merge` convention) and for the
-    fused-vs-unfused benchmark comparison.
+    every row, slice k. Exact reference for ordering (squared-distance
+    keys, ties resolve to the lower slot — the `query/merge`
+    convention) and for the fused-vs-unfused benchmark comparison.
 
     q: (Q, D), p: (N, D), gids: (N,) i32 (-1 dead), r scalar/(Q,).
     Returns ascending (distances (Q, k) f32, ids (Q, k) i32) padded
@@ -28,23 +46,32 @@ def topk_l2(q, p, gids, r, k: int):
     """
     q = jnp.asarray(q, jnp.float32)
     rb = jnp.broadcast_to(jnp.asarray(r, jnp.float32), q.shape[:1])
-    d = jnp.sqrt(pairwise_sq_l2(q, p))  # (Q, N) materialized
-    ok = (jnp.asarray(gids) >= 0)[None, :] & (d <= rb[:, None])
-    d = jnp.where(ok, d, jnp.inf)
-    kk = min(k, int(p.shape[0]))
-    order = jnp.argsort(d, axis=1)[:, :kk]
-    dd = jnp.take_along_axis(d, order, axis=1)
-    gg = jnp.take_along_axis(
-        jnp.broadcast_to(jnp.asarray(gids, jnp.int32)[None, :], d.shape),
-        order,
-        axis=1,
+    sq = pairwise_sq_l2(q, p)  # (Q, N) materialized
+    dl = jnp.sqrt(sq)
+    ok = (jnp.asarray(gids) >= 0)[None, :] & (dl <= rb[:, None])
+    gids2d = jnp.broadcast_to(
+        jnp.asarray(gids, jnp.int32)[None, :], sq.shape
     )
-    gg = jnp.where(jnp.isinf(dd), -1, gg)
-    if kk < k:
-        pad = ((0, 0), (0, k - kk))
-        dd = jnp.pad(dd, pad, constant_values=jnp.inf)
-        gg = jnp.pad(gg, pad, constant_values=-1)
-    return dd, gg
+    return _select_rows(sq, dl, ok, gids2d, k)
+
+
+def leaf_topk_l2(q, cands, cgids, r, k: int):
+    """Batched-candidates oracle for `kernels.topk_l2.leaf_topk_l2`:
+    every query row scans its OWN (C, D) candidate matrix (the gathered
+    leaf frontier of the fused traversal), ties to the lower candidate
+    column (= DFS visit order).
+
+    q: (R, D), cands: (R, C, D), cgids: (R, C) i32 (-1 hole),
+    r scalar/(R,). Returns ascending (distances (R, k), ids (R, k)).
+    """
+    q = jnp.asarray(q, jnp.float32)
+    c = jnp.asarray(cands, jnp.float32)
+    rb = jnp.broadcast_to(jnp.asarray(r, jnp.float32), q.shape[:1])
+    diff = q[:, None, :] - c
+    sq = (diff * diff).sum(-1)  # (R, C)
+    dl = jnp.sqrt(sq)
+    ok = (jnp.asarray(cgids) >= 0) & (dl <= rb[:, None])
+    return _select_rows(sq, dl, ok, jnp.asarray(cgids, jnp.int32), k)
 
 
 def cov_matvec(x: jnp.ndarray, mean: jnp.ndarray, w: jnp.ndarray):

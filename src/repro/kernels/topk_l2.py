@@ -35,6 +35,27 @@ keyed lexicographically by (distance, slot index), which is exactly
 the order a stable argsort of the masked distance row would produce —
 ties go to the lower slot.
 
+Squared-distance selection (two-pass radius refinement): the kernel
+never takes a square root — blocks are compared, gated, and selected
+as SQUARED distances, with the radius squared *conservatively upward*
+(`radius_sq_upper`) so no point with euclidean distance <= r can be
+rejected in-kernel. The wrapper then takes `sqrt` of only the k
+survivors and applies the exact euclidean gate `sqrt(sq) <= r`. This
+is exact, not approximate: any conservative false admit has a strictly
+larger squared distance than every true candidate (sqrt is monotone),
+so false admits can only occupy trailing slots of the k-window — the
+final mask removes them without ever having displaced a true result.
+The full-width per-element sqrt this replaces sat on the VPU critical
+path of every (bm, bn) block.
+
+``leaf_topk_l2`` is the batched-candidates variant used by the fused
+tree traversal: each query row carries its OWN (C, D) candidate matrix
+(the gathered leaf frontier of that query, in DFS visit order). Its
+distance block uses the difference form ``Σ (q - c)²`` — the same f32
+rounding as the traversal's in-loop leaf evaluation, which the
+two-phase path must match bit-for-bit — and the slot tie-break key
+reproduces the traversal's insertion order exactly.
+
 All comparator stages address XOR partners by reshaping the lane axis
 to (pairs, 2, stride) and comparing along the pair axis — static
 reshapes and selects only, no gathers, scatters, or dynamic indexing
@@ -53,6 +74,21 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 _I32_MAX = np.iinfo(np.int32).max
+
+# conservative relative slack for the in-kernel squared radius gate:
+# with correctly-rounded f32 ops, sqrt(sq) <= r implies
+# sq < (r*r) * (1 + 1.76 * 2^-23); 2^-20 leaves an 8x margin
+_R2_SLACK = 1.0 + 2.0**-20
+
+
+def radius_sq_upper(r):
+    """Conservatively-rounded squared radius: every candidate whose
+    euclidean f32 distance satisfies `sqrt(sq) <= r` also satisfies
+    `sq <= radius_sq_upper(r)` — the sound in-kernel squared gate of
+    the two-pass radius refinement (exactness restored by the final
+    `sqrt(sq) <= r` mask on the k survivors)."""
+    r = jnp.asarray(r)
+    return r * r * jnp.asarray(_R2_SLACK, r.dtype)
 
 
 def _next_pow2(n: int) -> int:
@@ -87,8 +123,16 @@ def block_plan(
     """Resolved launch geometry + analytic cost of one fused top-k call.
 
     Mirrors the clamp logic of `topk_l2` exactly — the single source of
-    truth shared by the wrapper accounting (`ops.py`) and the roofline
-    benchmarks (`benchmarks/kernels_bench.py`).
+    truth shared by the wrapper accounting (`ops.py`), the roofline
+    benchmarks (`benchmarks/kernels_bench.py`), and the block autotuner
+    (`kernels/autotune.py`).
+
+    `flops` / `hbm_bytes` are the block-independent *algorithmic*
+    counts (what the workload irreducibly costs); `padded_flops` /
+    `stream_bytes` / `vmem_bytes` are the block-DEPENDENT terms the
+    autotuner ranks on: padding waste, pipeline refetch traffic (the q
+    tile is re-read once per N block, the p tile once per M block),
+    and the VMEM working set.
     """
     kp = _next_pow2(k)
     bm = min(bm, _round_up(m, 8))
@@ -96,6 +140,7 @@ def block_plan(
     bk = min(bk, _round_up(d, 128))
     mp, np_, dp = _round_up(m, bm), _round_up(n, bn), _round_up(d, bk)
     grid = (mp // bm, np_ // bn, dp // bk)
+    stages = selection_stages(kp, bn)
     return {
         "kp": kp,
         "bm": bm,
@@ -107,9 +152,18 @@ def block_plan(
         # compare-exchange stage of the selection network
         "flops": 2 * m * n * d
         + 2 * (m + n) * d
-        + 8 * m * n * selection_stages(kp, bn),
+        + 8 * m * n * stages,
         # stream q, p, gids once; write the (Q, kp) d/gid/slot triple
         "hbm_bytes": (m * d + n * d) * 4 + n * 4 + m * kp * 12,
+        # block-aware autotuner terms ------------------------------------
+        "padded_flops": 2 * mp * np_ * dp
+        + 2 * (mp + np_) * dp
+        + 8 * mp * np_ * stages,
+        "stream_bytes": mp * dp * 4 * grid[1]   # q refetched per N block
+        + (np_ * dp * 4 + np_ * 4) * grid[0]    # p+gids refetched per M
+        + mp * kp * 12,
+        "vmem_bytes": (bm * bk + bn * bk + bm * bn + 3 * bm * kp + bm + bn)
+        * 4,
     }
 
 
@@ -216,7 +270,10 @@ def _kernel(
     # ---- selection: only on the last K step, once per (i, j) block ------
     @pl.when(kk == k_steps - 1)
     def _select():
-        d = jnp.sqrt(jnp.maximum(acc_ref[...], 0.0))  # euclidean
+        # squared-domain selection: no sqrt in-kernel; r_ref carries the
+        # conservatively-squared radius (`radius_sq_upper`), the wrapper
+        # refines the k survivors with the exact euclidean gate
+        d = jnp.maximum(acc_ref[...], 0.0)
         g = g_ref[...]                                # (1, bn) gids
         idx = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
         slot = j * bn + idx  # global arena slot: the tie-break key
@@ -291,7 +348,11 @@ def topk_l2(
         jnp.asarray(gids, jnp.int32)
     )
     rb = jnp.broadcast_to(jnp.asarray(r, jnp.float32), (m,))
-    rpad = jnp.zeros((mp, 1), jnp.float32).at[:m, 0].set(rb)
+    # the kernel selects SQUARED distances gated by the conservatively-
+    # squared radius; exactness is restored on the k survivors below
+    rpad = jnp.zeros((mp, 1), jnp.float32).at[:m, 0].set(
+        radius_sq_upper(rb)
+    )
     k_steps = dp // bk
     grid = (mp // bm, np_ // bn, k_steps)
     with jax.named_scope("kernel.topk_l2"):
@@ -319,6 +380,200 @@ def topk_l2(
             scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
             interpret=interpret,
         )(qpad, ppad, gpad, rpad)
-    dd = out_d[:m, :k]
-    gg = jnp.where(jnp.isinf(dd), -1, out_g[:m, :k])
+    # two-pass radius refinement: sqrt only the k survivors, then apply
+    # the exact euclidean gate — conservative false admits have strictly
+    # larger squared distance than every true candidate, so they sit in
+    # trailing slots and masking them cannot reorder true results
+    sq = out_d[:m, :k]
+    dl = jnp.sqrt(sq)
+    ok = dl <= rb[:, None]
+    dd = jnp.where(ok, dl, jnp.inf)
+    gg = jnp.where(ok, out_g[:m, :k], -1)
+    return dd, gg
+
+
+def leaf_block_plan(
+    r: int,
+    c: int,
+    d: int,
+    k: int,
+    *,
+    bm: int = 8,
+    bn: int = 128,
+    bk: int = 512,
+) -> dict:
+    """Launch geometry + analytic cost of one batched leaf-candidate
+    call (`leaf_topk_l2`): each of the `r` rows scans its OWN (c, d)
+    candidate matrix, so the distance block is a batched matvec and the
+    candidate tensor itself dominates the stream. Mirrors the wrapper's
+    clamp logic exactly, like `block_plan` does for `topk_l2`."""
+    kp = _next_pow2(k)
+    bm = min(bm, _round_up(r, 8))
+    bn = max(kp, min(_next_pow2(bn), _round_up(_next_pow2(c), 128)))
+    bk = min(bk, _round_up(d, 128))
+    rp, cp, dp = _round_up(r, bm), _round_up(c, bn), _round_up(d, bk)
+    grid = (rp // bm, cp // bn, dp // bk)
+    stages = selection_stages(kp, bn)
+    return {
+        "kp": kp,
+        "bm": bm,
+        "bn": bn,
+        "bk": bk,
+        "grid": grid,
+        "blocks": grid[0] * grid[1] * grid[2],
+        # difference-form distances (sub, mul, add) + selection network
+        "flops": 3 * r * c * d + 8 * r * c * stages,
+        # q + per-row candidates + gids streamed once, (r, kp) triple out
+        "hbm_bytes": (r * d + r * c * d) * 4 + r * c * 4 + r * kp * 12,
+        "padded_flops": 3 * rp * cp * dp + 8 * rp * cp * stages,
+        # candidates/gids are private per row — fetched exactly once;
+        # only the q tile is re-read per C block
+        "stream_bytes": rp * dp * 4 * grid[1]
+        + (rp * cp * dp * 4 + rp * cp * 4)
+        + rp * kp * 12,
+        "vmem_bytes": (
+            bm * bk + bm * bn * bk + 2 * bm * bn + 3 * bm * kp + bm
+        )
+        * 4,
+    }
+
+
+def _leaf_kernel(
+    q_ref, c_ref, g_ref, r_ref, od_ref, og_ref, os_ref, acc_ref,
+    *, k_steps: int, kp: int, bm: int, bn: int
+):
+    j = pl.program_id(1)
+    kk = pl.program_id(2)
+
+    @pl.when((j == 0) & (kk == 0))
+    def _init_best():
+        od_ref[...] = jnp.full_like(od_ref, jnp.inf)
+        og_ref[...] = jnp.full_like(og_ref, -1)
+        os_ref[...] = jnp.full_like(os_ref, _I32_MAX)
+
+    @pl.when(kk == 0)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # ---- batched distance block: each row vs its own candidates ---------
+    # deliberately the DIFFERENCE form, not the matmul decomposition:
+    # the traversal fallback evaluates leaves as ((pts - q)**2).sum(-1),
+    # and the two-phase path promises bit-identical results to it, so
+    # the kernel must round exactly the same way. Leaf frontiers are
+    # small (F·cap candidates per row) and the scan is memory-bound on
+    # the gathered candidate tensor, so the lost MXU matmul is not the
+    # bottleneck here the way it is in the shared-points kernels.
+    q = q_ref[...].astype(jnp.float32)  # (bm, bk)
+    c = c_ref[...].astype(jnp.float32)  # (bm, bn, bk)
+    diff = q[:, None, :] - c
+    acc_ref[...] += (diff * diff).sum(axis=2)
+
+    # ---- selection: squared domain, identical network to `_kernel` ------
+    @pl.when(kk == k_steps - 1)
+    def _select():
+        d = jnp.maximum(acc_ref[...], 0.0)
+        g = g_ref[...]  # (bm, bn) per-row candidate gids
+        idx = jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+        slot = j * bn + idx  # DFS visit-order position: the tie-break
+        ok = (g >= 0) & (d <= r_ref[...])
+        d = jnp.where(ok, d, jnp.inf)
+        s = jnp.where(ok, slot, _I32_MAX)
+
+        d, g, s = _block_topk_desc(d, g, s, kp, bn)
+
+        md = jnp.concatenate([od_ref[...], d[:, :kp]], axis=1)
+        mg = jnp.concatenate([og_ref[...], g[:, :kp]], axis=1)
+        ms = jnp.concatenate([os_ref[...], s[:, :kp]], axis=1)
+        stride = kp
+        while stride >= 1:
+            md, mg, ms = _cmpx(md, mg, ms, stride, jnp.bool_(True))
+            stride //= 2
+        od_ref[...] = md[:, :kp]
+        og_ref[...] = mg[:, :kp]
+        os_ref[...] = ms[:, :kp]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "bm", "bn", "bk", "interpret")
+)
+def leaf_topk_l2(
+    q: jax.Array,       # (R, D) one row per (segment, query) pair
+    cands: jax.Array,   # (R, C, D) per-row gathered leaf candidates
+    cgids: jax.Array,   # (R, C) i32 ids; negative = hole / dead slot
+    r,                  # scalar or (R,) euclidean radius gate
+    k: int,
+    *,
+    bm: int = 8,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+):
+    """Constrained k-nearest where every query row carries its own
+    candidate matrix — the phase-2 evaluator of the fused two-phase
+    traversal (each row's candidates are its gathered leaf frontier in
+    DFS visit order, so the (distance, slot) tie-break reproduces the
+    traversal's insertion order exactly).
+
+    Returns ``(distances (R, k) f32, ids (R, k) i32)`` ascending-sorted
+    per row with (+inf, -1) fill, same contract as `topk_l2`.
+    """
+    m, d = q.shape
+    m2, c, d2 = cands.shape
+    assert (m, d) == (m2, d2), (q.shape, cands.shape)
+    assert cgids.shape == (m, c), (cgids.shape, (m, c))
+    if m == 0 or c == 0:
+        return (
+            jnp.full((m, k), jnp.inf, jnp.float32),
+            jnp.full((m, k), -1, jnp.int32),
+        )
+    kp = _next_pow2(k)
+    bm = min(bm, _round_up(m, 8))
+    bn = max(kp, min(_next_pow2(bn), _round_up(_next_pow2(c), 128)))
+    bk = min(bk, _round_up(d, 128))
+    mp, cp, dp = _round_up(m, bm), _round_up(c, bn), _round_up(d, bk)
+    qpad = jnp.zeros((mp, dp), jnp.float32).at[:m, :d].set(
+        jnp.asarray(q, jnp.float32)
+    )
+    cpad = jnp.zeros((mp, cp, dp), jnp.float32).at[:m, :c, :d].set(
+        jnp.asarray(cands, jnp.float32)
+    )
+    gpad = jnp.full((mp, cp), -1, jnp.int32).at[:m, :c].set(
+        jnp.asarray(cgids, jnp.int32)
+    )
+    rb = jnp.broadcast_to(jnp.asarray(r, jnp.float32), (m,))
+    rpad = jnp.zeros((mp, 1), jnp.float32).at[:m, 0].set(
+        radius_sq_upper(rb)
+    )
+    k_steps = dp // bk
+    grid = (mp // bm, cp // bn, k_steps)
+    with jax.named_scope("kernel.leaf_topk_l2"):
+        out_d, out_g, _slots = pl.pallas_call(
+            functools.partial(
+                _leaf_kernel, k_steps=k_steps, kp=kp, bm=bm, bn=bn
+            ),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bm, bn, bk), lambda i, j, kk: (i, j, kk)),
+                pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+                pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((bm, kp), lambda i, j, kk: (i, 0)),
+                pl.BlockSpec((bm, kp), lambda i, j, kk: (i, 0)),
+                pl.BlockSpec((bm, kp), lambda i, j, kk: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((mp, kp), jnp.float32),
+                jax.ShapeDtypeStruct((mp, kp), jnp.int32),
+                jax.ShapeDtypeStruct((mp, kp), jnp.int32),
+            ],
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            interpret=interpret,
+        )(qpad, cpad, gpad, rpad)
+    sq = out_d[:m, :k]
+    dl = jnp.sqrt(sq)
+    ok = dl <= rb[:, None]
+    dd = jnp.where(ok, dl, jnp.inf)
+    gg = jnp.where(ok, out_g[:m, :k], -1)
     return dd, gg

@@ -14,7 +14,10 @@ writes per-section `BENCH_<section>.json` files; this module writes the
         "histograms": {"span.serve.search": {"unit": "s", "count": ...,
                        "sum": ..., "buckets": [[log2_edge, n], ...],
                        "p50": ..., "p95": ..., "p99": ...}, ...}
-      }
+      },
+      "autotune": {"<kernel>/<shape-class>/k<k>/<dtype>/<backend>":
+                   {"bm": ..., "bn": ..., "bk": ..., "grid": [...],
+                    "blocks": ..., "pred_us": ..., "source": ...}, ...}
     }
 
 Histogram buckets are sparse ``[log2 upper edge, count]`` pairs on the
@@ -34,10 +37,18 @@ from . import metrics
 
 def to_payload(registry: Optional[metrics.Registry] = None) -> dict:
     reg = registry or metrics.REGISTRY
+    # the autotuner's cached block plans ride along as a top-level
+    # `autotune` section (keyed kernel/shape-class/k/dtype/backend), so
+    # every obs artifact records which block geometry produced its
+    # numbers; lazy import keeps obs free of a kernels dependency at
+    # import time (kernels.ops already imports obs)
+    from repro.kernels import autotune
+
     return {
         "section": "obs",
         "generated_unix": time.time(),
         "obs": reg.snapshot(),
+        "autotune": autotune.decisions(),
     }
 
 

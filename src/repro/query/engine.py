@@ -9,9 +9,15 @@ implementation of dispatch, gid mapping, and the top-k merge.
 
 Planner: a snapshot's segments are grouped by their power-of-two
 *shape class* (`query/shapes.py`); all S segments of one class are
-answered by a single `constrained_knn_stacked` jit dispatch over a
-(S_pow2, …)-stacked DeviceTree batch (padded with an all-dead dummy
-member), and the delta arena joins as a degenerate class via the fused
+answered by a single stacked jit dispatch over a (S_pow2, …)-stacked
+DeviceTree batch (padded with an all-dead dummy member). The default
+dispatch is the fused two-phase traversal
+(`constrained_knn_stacked_fused`): phase 1 collects each query's
+pruned leaf frontier, phase 2 evaluates the gathered candidates with
+the `leaf_topk_l2` Pallas kernel — bit-exact vs the classic in-loop
+path, which remains as the `REPRO_FUSED_TRAVERSAL=0` escape hatch and
+the fallback when a frontier overflows its cap. The delta arena joins
+as a degenerate class via the fused
 streaming top-k kernel (`kernels/topk_l2.py`) — its (Q, k) output is
 already in `query/merge` sorted form, so it folds straight into the
 snapshot merge. The per-part sorted k-bests are folded with
@@ -37,6 +43,7 @@ paper metrics (nodes visited, leaves scanned, candidates evaluated).
 from __future__ import annotations
 
 import collections
+import os
 import threading
 from typing import List, NamedTuple, Optional, Tuple
 
@@ -70,6 +77,10 @@ class EngineResult(NamedTuple):
 # counters too — the compat shims below report whatever was recorded.
 _C_TRAVERSAL = obs.REGISTRY.counter("engine.dispatches", kind="traversal")
 _C_DELTA = obs.REGISTRY.counter("engine.dispatches", kind="delta")
+_C_FUSED = obs.REGISTRY.counter("engine.fused_traversal", kind="used")
+_C_FUSED_FB = obs.REGISTRY.counter(
+    "engine.fused_traversal", kind="overflow_fallback"
+)
 _C_STACK_FULL = obs.REGISTRY.counter("engine.stack_cache", kind="full_build")
 _C_STACK_INCR = obs.REGISTRY.counter("engine.stack_cache", kind="incremental")
 _G_SIGNATURES = obs.REGISTRY.gauge("engine.signatures")
@@ -101,9 +112,19 @@ def compile_stats() -> dict:
     `traversal_compiles` is None when the jit cache-size API is
     unavailable (it is private to jax) — callers must treat None as
     "unknown", never as zero."""
+    # NOTE: `sj._gather_frontier` is deliberately NOT listed — its cache
+    # keys on the data-dependent frontier width F_eff (a pow2 of the
+    # observed max frontier), so e.g. a tombstone that shrinks the
+    # frontier retraces it without constituting a new traversal program.
     sizes = [
         fn._cache_size()
-        for fn in (sj.constrained_knn_stacked, sj.constrained_knn, sj.knn)
+        for fn in (
+            sj.constrained_knn_stacked,
+            sj._collect_frontier_stacked,
+            sj._merge_segments,
+            sj.constrained_knn,
+            sj.knn,
+        )
         if callable(getattr(fn, "_cache_size", None))
     ]
     return {
@@ -262,6 +283,13 @@ def _stacked_views(group: ClassGroup) -> Tuple[sj.DeviceTree, jnp.ndarray]:
     return entry.stacked, entry.gids
 
 
+def _fused_enabled() -> bool:
+    """Two-phase kernel-leaf traversal is the default read path;
+    `REPRO_FUSED_TRAVERSAL=0` is the bisection escape hatch back to the
+    classic in-loop jnp leaf evaluation."""
+    return os.environ.get("REPRO_FUSED_TRAVERSAL", "1") != "0"
+
+
 def _dispatch_stacked(stacked, gids, q, rb, k: int, stack_size: int, cls):
     _C_TRAVERSAL.inc()
     with _SIG_LOCK:
@@ -270,6 +298,20 @@ def _dispatch_stacked(stacked, gids, q, rb, k: int, stack_size: int, cls):
         )
         _G_SIGNATURES.set(len(_SIGNATURES))
     with obs.span("engine.dispatch"):
+        # Fused two-phase traversal (collect leaf frontier, evaluate the
+        # gathered candidates with the leaf_topk_l2 kernel) is bit-exact
+        # vs the classic path and is the default. The kernel is f32; any
+        # other traversal dtype (search_tree overrides) takes the
+        # classic path. A frontier-cap overflow returns None — fall back
+        # and count it, so benchmarks can see a cap that is too small.
+        if _fused_enabled() and q.dtype == jnp.float32:
+            res = sj.constrained_knn_stacked_fused(
+                stacked, gids, q, rb, k, stack_size
+            )
+            if res is not None:
+                _C_FUSED.inc()
+                return res
+            _C_FUSED_FB.inc()
         return sj.constrained_knn_stacked(stacked, gids, q, rb, k, stack_size)
 
 

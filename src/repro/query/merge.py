@@ -38,6 +38,31 @@ def topk_sorted(d: jax.Array, i: jax.Array, k: int):
     return -neg, jnp.take_along_axis(i, pos, axis=-1)
 
 
+def topk_vals(d: jax.Array, k: int) -> jax.Array:
+    """Ascending smallest-k VALUES of unsorted candidates along the
+    last axis — the index-free sibling of `topk_sorted`, for carriers
+    that only need the distance window (e.g. the fused traversal's
+    phase 1, which tracks the k-th best purely for d_s pruning)."""
+    m = d.shape[-1]
+    neg, _ = jax.lax.top_k(-d, min(k, m))
+    return -neg
+
+
+def merge_sorted_vals(da: jax.Array, db: jax.Array) -> jax.Array:
+    """`merge_sorted` for values only: same cross-rank positions, but
+    a single pair of scatters (no id payload to carry)."""
+    ka, kb = da.shape[-1], db.shape[-1]
+    pos_a = jnp.arange(ka) + jnp.sum(
+        db[..., None, :] < da[..., :, None], axis=-1
+    )
+    pos_b = jnp.arange(kb) + jnp.sum(
+        da[..., None, :] <= db[..., :, None], axis=-1
+    )
+    shape = jnp.broadcast_shapes(da.shape[:-1], db.shape[:-1])
+    out_d = jnp.zeros(shape + (ka + kb,), da.dtype)
+    return _scatter_last(_scatter_last(out_d, pos_a, da), pos_b, db)
+
+
 def _scatter_last(out: jax.Array, pos: jax.Array, val: jax.Array) -> jax.Array:
     """out[..., pos[..., j]] = val[..., j] with batched positions."""
     m = out.shape[-1]

@@ -1,0 +1,210 @@
+"""Two-phase fused traversal == classic jnp traversal == host oracle.
+
+The fused path (phase-1 frontier collection + phase-2 `leaf_topk_l2`
+kernel evaluation) must be bit-identical to the classic in-loop
+traversal — results AND the paper-metric counts (nodes visited, leaves
+scanned, candidates evaluated) — across k, radius regimes, tombstones,
+dummy-padded stacked batches, and tie-heavy quantized coordinates.
+Overflowing the frontier cap must fall back, never truncate.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import TreeSpec, build
+from repro.core import search_host as sh
+from repro.core import search_jax as sj
+from repro.index import StreamingConfig, StreamingIndex
+from repro.query import QuerySpec
+from repro.query import engine as qengine
+
+SPEC = TreeSpec.ballstar(leaf_size=8)
+
+
+def _stack_one(tree):
+    # leaf_index already carries ORIGINAL point ids (perm applied at
+    # build), so a static tree's local->global gid table is identity
+    dts = jax.tree_util.tree_map(lambda x: x[None], sj.device_tree(tree))
+    gids = jnp.arange(tree.n_points, dtype=jnp.int32)[None]
+    return dts, gids
+
+
+def _both(tree, queries, r, k, fcap=None):
+    dts, gids = _stack_one(tree)
+    q = jnp.asarray(np.asarray(queries, np.float32))
+    rb = jnp.broadcast_to(jnp.asarray(r, jnp.float32), q.shape[:1])
+    ss = sj.max_depth(tree) + 3
+    ref = sj.constrained_knn_stacked(dts, gids, q, rb, k, ss)
+    fus = sj.constrained_knn_stacked_fused(
+        dts, gids, q, rb, k, ss, frontier_cap=fcap
+    )
+    return ref, fus
+
+
+def _assert_bitexact(ref, fus):
+    assert fus is not None, "unexpected frontier overflow"
+    for fld in ref._fields:
+        a, b = np.asarray(getattr(ref, fld)), np.asarray(getattr(fus, fld))
+        assert np.array_equal(a, b), fld
+
+
+@pytest.mark.parametrize("k,r", [(1, 0.9), (8, 1.2), (8, np.inf), (64, 1.5)])
+def test_fused_bitexact_vs_classic(k, r):
+    rng = np.random.default_rng(5)
+    tree = build(rng.standard_normal((400, 4)).astype(np.float32), SPEC)
+    queries = rng.standard_normal((8, 4))
+    ref, fus = _both(tree, queries, r, k)
+    _assert_bitexact(ref, fus)
+
+
+def test_fused_small_n_lt_k():
+    """Fewer points than k: the (+inf, -1) padding rows must agree."""
+    rng = np.random.default_rng(6)
+    tree = build(rng.standard_normal((5, 3)).astype(np.float32), SPEC)
+    ref, fus = _both(tree, rng.standard_normal((4, 3)), np.inf, 8)
+    _assert_bitexact(ref, fus)
+    assert np.isinf(np.asarray(fus.distances)[:, 5:]).all()
+
+
+def test_fused_tie_heavy_quantized_vs_classic_and_host():
+    """Coordinates on a coarse grid force massed distance ties: the
+    fused path must reproduce the classic path bit-for-bit (same
+    insertion-order tie-breaks) and the host oracle's result set,
+    distances, and counts."""
+    rng = np.random.default_rng(7)
+    pts = (rng.integers(-3, 4, size=(300, 3)) * 0.5).astype(np.float32)
+    tree = build(pts, SPEC)
+    queries = (rng.integers(-3, 4, size=(6, 3)) * 0.5).astype(np.float32)
+    k, r = 8, 2.0
+    ref, fus = _both(tree, queries, r, k)
+    _assert_bitexact(ref, fus)
+    for i in range(queries.shape[0]):
+        host = sh.constrained_knn(tree, queries[i], k, r)
+        hd = host.distances.astype(np.float32)
+        gd = np.asarray(fus.distances[i])
+        fin = np.isfinite(gd)
+        assert np.array_equal(gd[fin], hd), i  # distance multiset: exact
+        # gid sets must agree STRICTLY inside the k-th distance; ties AT
+        # the boundary are broken by DFS order on device vs original id
+        # on the host, so only their count is pinned
+        gg = np.asarray(fus.gids[i])[fin]
+        if len(hd):
+            kth = hd[-1]
+            assert set(gg[gd[fin] < kth].tolist()) == set(
+                host.indices[hd < kth].tolist()
+            ), i
+            assert (gd[fin] == kth).sum() == (hd == kth).sum(), i
+        assert int(fus.nodes_visited[i]) == host.nodes_visited, i
+        assert int(fus.leaves_visited[i]) == host.leaves_visited, i
+        assert int(fus.points_examined[i]) == host.points_examined, i
+
+
+def test_fused_counts_match_host_oracle():
+    """Phase 1 runs the classic pruning, so the paper-metric counts of
+    the fused result must equal the host recursion's exactly."""
+    rng = np.random.default_rng(8)
+    pts = rng.standard_normal((500, 3)).astype(np.float32)
+    tree = build(pts, SPEC)
+    queries = rng.standard_normal((10, 3)).astype(np.float32)
+    k, r = 5, 1.0
+    _, fus = _both(tree, queries, r, k)
+    assert fus is not None
+    for i in range(queries.shape[0]):
+        host = sh.constrained_knn(tree, queries[i], k, r)
+        assert int(fus.nodes_visited[i]) == host.nodes_visited
+        assert int(fus.leaves_visited[i]) == host.leaves_visited
+        assert int(fus.points_examined[i]) == host.points_examined
+
+
+def test_leaf_frontier_parity_with_host():
+    """The device phase-1 frontier (leaf ranks, DFS order) == the host
+    `leaf_frontier` oracle, per query."""
+    rng = np.random.default_rng(9)
+    pts = rng.standard_normal((400, 3)).astype(np.float32)
+    tree = build(pts, SPEC)
+    queries = rng.standard_normal((6, 3)).astype(np.float32)
+    k, r = 4, 1.1
+    dts, _ = _stack_one(tree)
+    q = jnp.asarray(queries)
+    frontier, nf, *_ = sj._collect_frontier_stacked(
+        dts, q, jnp.full((6,), np.float32(r)), k, sj.max_depth(tree) + 3, 64
+    )
+    frontier, nf = np.asarray(frontier[0]), np.asarray(nf[0])
+    for i in range(queries.shape[0]):
+        want = sh.leaf_frontier(tree, queries[i], k, r)
+        assert nf[i] == len(want), i
+        assert frontier[i, : len(want)].tolist() == want, i
+        assert (frontier[i, len(want):] == -1).all(), i
+
+
+def test_fused_overflow_returns_none():
+    """A frontier wider than the cap must refuse (return None), not
+    silently truncate to a wrong answer."""
+    rng = np.random.default_rng(10)
+    tree = build(rng.standard_normal((400, 3)).astype(np.float32), SPEC)
+    queries = rng.standard_normal((4, 3))
+    ref, fus = _both(tree, queries, np.inf, 8, fcap=2)
+    assert fus is None
+    _, fus_ok = _both(tree, queries, np.inf, 8, fcap=256)
+    _assert_bitexact(ref, fus_ok)
+
+
+# -- engine-level: the fused path is the DEFAULT read path ------------------
+def _make_index(dim, cap=32, factor=2):
+    return StreamingIndex(
+        StreamingConfig(
+            dim=dim, delta_capacity=cap, spec=SPEC, merge_factor=factor
+        )
+    )
+
+
+def _engine_result(idx, queries, k, r):
+    return qengine.execute(
+        idx.snapshot(), queries, QuerySpec(k=k, radius=r, return_visits=True)
+    )
+
+
+def test_engine_default_is_fused_and_matches_classic(monkeypatch):
+    """The engine's default dispatch takes the fused path (the `used`
+    counter moves) and its full result — gids, distances, AND the
+    per-query paper metrics — is bit-identical to the classic path
+    selected via the REPRO_FUSED_TRAVERSAL=0 escape hatch."""
+    rng = np.random.default_rng(11)
+    idx = _make_index(3)
+    for _ in range(3):
+        idx.add(rng.standard_normal((40, 3)))
+    idx.delete(rng.choice(idx.live_gids(), size=15, replace=False))
+    queries = rng.standard_normal((5, 3))
+
+    used0 = qengine._C_FUSED.value
+    got = _engine_result(idx, queries, 4, 1.5)
+    assert qengine._C_FUSED.value > used0  # fused actually ran
+
+    monkeypatch.setenv("REPRO_FUSED_TRAVERSAL", "0")
+    want = _engine_result(idx, queries, 4, 1.5)
+    for fld in got._fields:
+        a, b = np.asarray(getattr(got, fld)), np.asarray(getattr(want, fld))
+        assert np.array_equal(a, b), fld
+
+
+def test_engine_overflow_falls_back_exactly(monkeypatch):
+    """With a tiny frontier cap every dispatch overflows: the engine
+    must fall back to the classic path (counter moves) and still return
+    the identical answer."""
+    rng = np.random.default_rng(12)
+    idx = _make_index(2)
+    idx.bulk_load(rng.standard_normal((200, 2)))
+    queries = rng.standard_normal((4, 2))
+
+    monkeypatch.setenv("REPRO_FRONTIER_CAP", "1")
+    fb0 = qengine._C_FUSED_FB.value
+    got = _engine_result(idx, queries, 6, np.inf)
+    assert qengine._C_FUSED_FB.value > fb0  # overflowed and fell back
+
+    monkeypatch.delenv("REPRO_FRONTIER_CAP")
+    want = _engine_result(idx, queries, 6, np.inf)
+    for fld in got._fields:
+        a, b = np.asarray(getattr(got, fld)), np.asarray(getattr(want, fld))
+        assert np.array_equal(a, b), fld

@@ -192,7 +192,11 @@ def test_compile_count_bounded_by_shape_classes():
         idx.constrained_knn(queries, 5, 1.5)
     new_sigs = qengine.observed_signatures() - sigs0
     new_compiles = qengine.compile_stats()["traversal_compiles"] - compiles0
-    assert new_compiles <= len(new_sigs)  # one compile per signature, max
+    # the fused two-phase default compiles up to three programs per
+    # signature (phase-1 collect, the stacked merge, and — on an
+    # overflow fallback — the classic path); still O(1) per signature,
+    # never per merge
+    assert new_compiles <= 3 * len(new_sigs)
     assert len(new_sigs) <= 12  # log-bounded classes, not one-per-merge
 
 
