@@ -12,7 +12,10 @@ Checks every ``BENCH_<section>.json`` in the output directory
     section is present and each cached block plan satisfies the
     kernels' block constraints (bm a multiple of 8, bn a multiple of
     128 — resolved geometry may clamp a pow2 candidate to the padded
-    problem — a valid ``source``, numeric cost terms).
+    problem — a valid ``source``, numeric cost terms); the
+    ``quantized`` section is present and each storage-dtype record
+    carries a string dtype, non-negative byte/reduction numbers, and
+    integer rescore-pass counts.
 
 Exits nonzero listing every violation, so CI fails loudly when a bench
 section silently stops emitting or the artifact schema drifts.
@@ -97,6 +100,43 @@ def check_obs(path: str, payload: dict) -> List[str]:
                 f"{path}: histogram {key} bucket counts != count={h['count']}"
             )
     errs.extend(check_autotune(path, payload))
+    errs.extend(check_quantized(path, payload))
+    return errs
+
+
+def check_quantized(path: str, payload: dict) -> List[str]:
+    """The `quantized` section: per storage dtype, streamed-bytes
+    accounting of the quantized read path (bytes at true storage width
+    vs f32 equivalent, reduction factor, rescore-pass outcomes). Empty
+    when the run never streamed a quantized buffer — the key itself
+    must still be present."""
+    errs = []
+    qs = payload.get("quantized")
+    if not isinstance(qs, dict):
+        return [f"{path}: missing 'quantized' object"]
+    for dt, rec in qs.items():
+        if not isinstance(rec, dict):
+            errs.append(f"{path}: quantized[{dt}] not an object")
+            continue
+        sd = rec.get("storage_dtype")
+        if not isinstance(sd, str) or not sd:
+            errs.append(
+                f"{path}: quantized[{dt}].storage_dtype={sd!r} not a string"
+            )
+        for field in ("bytes_quantized", "bytes_f32_equiv", "reduction_factor"):
+            v = rec.get(field)
+            if not _num(v) or v < 0:
+                errs.append(
+                    f"{path}: quantized[{dt}].{field}={v!r} "
+                    f"not a non-negative number"
+                )
+        for field in ("rescore_exact", "rescore_fallback"):
+            v = rec.get(field)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                errs.append(
+                    f"{path}: quantized[{dt}].{field}={v!r} "
+                    f"not a non-negative int"
+                )
     return errs
 
 

@@ -54,6 +54,15 @@ def radius_for(pts: np.ndarray, frac: float = 0.05) -> float:
     return frac * diag
 
 
+def storage_dtype() -> str:
+    """Segment-storage dtype for the bench legs that exercise the
+    quantized read path. `BENCH_DTYPE` overrides (float32 / bfloat16 /
+    int8); the default matches the engine default (bfloat16)."""
+    from repro.kernels import quantize
+
+    return quantize.check_dtype(os.environ.get("BENCH_DTYPE", "bfloat16"))
+
+
 def env_caps():
     """(BENCH_N, BENCH_Q) when set in the environment, else (None, None).
     Sections with their own hardcoded shapes (the kernel benches) cap
@@ -108,7 +117,7 @@ def write_bench_json(section: str, out_dir: Optional[str] = None) -> str:
         "generated_unix": time.time(),
         "env": {
             k: os.environ[k]
-            for k in ("BENCH_N", "BENCH_Q", "JAX_PLATFORMS")
+            for k in ("BENCH_N", "BENCH_Q", "BENCH_DTYPE", "JAX_PLATFORMS")
             if k in os.environ
         },
         "records": list(_RECORDS),
@@ -146,6 +155,7 @@ __all__ = [
     "SYNTHETIC",
     "SPECS",
     "sizes",
+    "storage_dtype",
     "env_caps",
     "dataset",
     "queries_for",

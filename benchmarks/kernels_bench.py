@@ -208,6 +208,72 @@ def run(full: bool = False):
         unit="pred_us",
     )
 
+    # ---- quantized segment storage: streamed HBM bytes vs all-f32 ------
+    # The leaf kernel is input-read bound, so storage width IS the
+    # roofline: compare the analytic stream bytes of the f32 plan vs the
+    # BENCH_DTYPE plan at a representative gathered-frontier shape, then
+    # run the real raw kernel (interpret mode on CPU) against its
+    # oracle so the numbers ship with a correctness check.
+    from repro.kernels import quantize as _qz
+
+    from .common import storage_dtype as _storage_dtype
+
+    sdt = _storage_dtype()
+    rq, cq_, dq, kq = _capped(64, 1024) + (128, 8)
+    plan_f32 = _tk.leaf_block_plan(rq, cq_, dq, kq, itemsize=4)
+    plan_q = _tk.leaf_block_plan(
+        rq, cq_, dq, kq, itemsize=_qz.itemsize_of(sdt)
+    )
+    reduction = plan_f32["stream_bytes"] / plan_q["stream_bytes"]
+    if sdt == "bfloat16" and reduction < 1.9:
+        raise AssertionError(
+            f"bf16 quantized stream reduction {reduction:.2f}x < 1.9x "
+            f"({plan_f32['stream_bytes']} -> {plan_q['stream_bytes']} B)"
+        )
+    lq_pts = rng.standard_normal((rq, cq_, dq)).astype(np.float32)
+    lq_q, lq_scale, lq_err = _qz.quantize_leaves(lq_pts, sdt)
+    if lq_q is None:  # BENCH_DTYPE=float32: stream the f32 buffer itself
+        lq_q = jnp.asarray(lq_pts)
+    qrows = jnp.asarray(rng.standard_normal((rq, dq)), jnp.float32)
+    cgq = jnp.asarray(
+        np.where(rng.random((rq, cq_)) < 0.1, -1, np.arange(cq_)[None, :]),
+        jnp.int32,
+    )
+    rbq = jnp.full((rq,), jnp.inf, jnp.float32)
+
+    def _quant():
+        return jax.block_until_ready(
+            ops.leaf_topk_l2_raw(qrows, lq_q, cgq, rbq, kq, cscale=lq_scale)[0]
+        )
+
+    _quant()  # compile
+    _, dt_q = timed(_quant, repeat=3)
+    emit(
+        f"kernel/leaf_topk_raw/{rq}x{cq_}x{dq}/k={kq}/{sdt}",
+        dt_q * 1e6,
+        f"cpu_interpret_wall;storage_dtype={sdt};"
+        f"stream_bytes_f32={plan_f32['stream_bytes']};"
+        f"stream_bytes_{sdt}={plan_q['stream_bytes']};"
+        f"stream_reduction={reduction:.2f}x;qerr={lq_err:.3e};"
+        f"tpu_mem_us_f32={plan_f32['stream_bytes'] / HBM_BW * 1e6:.1f};"
+        f"tpu_mem_us_{sdt}={plan_q['stream_bytes'] / HBM_BW * 1e6:.1f}",
+    )
+    sq_k, g_k, s_k = ops.leaf_topk_l2_raw(
+        qrows, lq_q, cgq, rbq, kq, cscale=lq_scale
+    )
+    sq_r, g_r, s_r = ref.leaf_topk_l2_raw(
+        qrows, lq_q, cgq, rbq, kq, cscale=lq_scale
+    )
+    np.testing.assert_array_equal(np.asarray(s_k), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(g_k), np.asarray(g_r))
+    # int8 dequant may FMA-contract differently in-kernel: ulp tolerance
+    np.testing.assert_allclose(
+        np.asarray(sq_k), np.asarray(sq_r), rtol=1e-5, atol=0
+    )
+    emit(
+        f"kernel/leaf_topk_raw_check/{sdt}", 0.0, "quantized_vs_oracle_ok"
+    )
+
     # interpret-mode correctness spot checks ride along: the REAL Pallas
     # programs (pairwise + fused top-k) vs their oracles
     q = jnp.asarray(rng.standard_normal((64, 32)), jnp.float32)

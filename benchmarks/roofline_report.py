@@ -75,6 +75,32 @@ def kernel_accounting_rows() -> dict:
     return rows
 
 
+def quantized_rows() -> dict:
+    """Streamed-bytes accounting of the quantized leaf scans: per
+    storage dtype, the bytes actually streamed (billed at TRUE storage
+    width by `ops.leaf_topk_l2_raw`) vs what the same launches would
+    have streamed at f32, plus the rescore certificate outcomes."""
+    from repro import obs
+
+    snap = obs.snapshot()["counters"]
+    rows = {}
+    for key, val in snap.items():
+        if not key.startswith("quantized.stream_bytes{"):
+            continue
+        dt = key[len("quantized.stream_bytes{dtype=") : -1]
+        f32 = snap.get(f"quantized.f32_stream_bytes{{dtype={dt}}}", 0)
+        rows[dt] = {
+            "stream_bytes": val,
+            "f32_equiv_bytes": f32,
+            "reduction": f32 / val if val else 0.0,
+            "rescore_exact": snap.get("quantized.rescore{result=exact}", 0),
+            "rescore_fallback": snap.get(
+                "quantized.rescore{result=fallback}", 0
+            ),
+        }
+    return rows
+
+
 def autotune_rows() -> dict:
     """The block plans the autotuner resolved in this process — the
     geometry behind every `roofline/observed/*` row above."""
@@ -91,6 +117,16 @@ def run(full: bool = False):
             f"hbm_bytes={t['hbm_bytes']};flops={t['flops']};"
             f"ai={t['ai']:.2f}flops_per_byte;tpu_bound={t['tpu_bound']}",
             unit="calls",
+        )
+    for dt, t in sorted(quantized_rows().items()):
+        emit(
+            f"roofline/quantized/{dt}",
+            t["stream_bytes"],
+            f"f32_equiv_bytes={t['f32_equiv_bytes']};"
+            f"reduction={t['reduction']:.2f}x;"
+            f"rescore_exact={t['rescore_exact']};"
+            f"rescore_fallback={t['rescore_fallback']}",
+            unit="bytes",
         )
     for key, plan in sorted(autotune_rows().items()):
         emit(

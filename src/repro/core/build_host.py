@@ -107,7 +107,14 @@ def build(points: np.ndarray, spec: TreeSpec | None = None) -> Tree:
     def new_node(lo: int, hi: int) -> int:
         pts = points[order[lo:hi]]
         c = pts.mean(axis=0)
-        r = float(np.sqrt(((pts - c) ** 2).sum(axis=1).max()))
+        # conservative outward rounding (see build_jax._R_WIDEN): the
+        # stored radius stays an upper bound on max ||p - c|| through
+        # f32 pruning arithmetic and quantized leaf storage; computed
+        # in f32 so the value survives the device cast bit-for-bit
+        r = float(
+            np.float32(np.sqrt(((pts - c) ** 2).sum(axis=1).max()))
+            * np.float32(1.0 + 2.0**-20)
+        )
         centers.append(c)
         radii.append(r)
         child_l.append(-1)

@@ -30,9 +30,20 @@ import jax.numpy as jnp
 
 from .types import Tree, TreeSpec, leaf_capacity_for
 
+# conservative outward rounding of every stored node/leaf radius (one
+# f32 ulp-scale widen, same constant as build_host._R_WIDEN and the
+# kernels' r²-slack): the invariant `radius >= max ||p - center||`
+# must hold with margin even after the radius re-enters f32 pruning
+# arithmetic, and — under quantized leaf storage — after coordinates
+# round to bf16/int8 at seal. Widening only ever ADMITS more nodes
+# (D_N = |q-c| - r shrinks), so pruning stays sound; exactness of
+# results is untouched (the leaf evaluation rescores in f32).
+_R_WIDEN = np.float32(1.0 + 2.0**-20)
+
 
 def _segment_stats(x, seg, weights, num_segs):
-    """Per-segment count, mean, radius (max distance to mean)."""
+    """Per-segment count, mean, radius (max distance to mean),
+    conservatively rounded outward by `_R_WIDEN`."""
     w = weights.astype(x.dtype)
     cnt = jax.ops.segment_sum(w, seg, num_segments=num_segs)
     sx = jax.ops.segment_sum(x * w[:, None], seg, num_segments=num_segs)
@@ -41,7 +52,7 @@ def _segment_stats(x, seg, weights, num_segs):
     r2 = jax.ops.segment_max(
         jnp.where(weights, d2, -jnp.inf), seg, num_segments=num_segs
     )
-    radius = jnp.sqrt(jnp.maximum(r2, 0.0))
+    radius = jnp.sqrt(jnp.maximum(r2, 0.0)) * _R_WIDEN
     return cnt, mean, radius
 
 

@@ -462,6 +462,102 @@ def _gather_frontier(dts: DeviceTree, gids, queries, r, frontier):
     return qrows, cpts.reshape(s * qn, c, dim), cg.reshape(s * qn, c), rrows
 
 
+@jax.jit
+def _gather_frontier_quantized(leaf_q, leaf_index, gids, frontier, qscale):
+    """Phase-2 gather over the QUANTIZED leaf buffer: same row layout
+    as `_gather_frontier` (so candidate slots coincide position-for-
+    position with the f32 gather) but the candidate tensor stays in its
+    storage dtype, and int8 segments broadcast their per-leaf dequant
+    scale to a per-candidate (R, C) f32 row for the kernel."""
+    s, qn, f = frontier.shape
+    n = gids.shape[1]
+    cap, dim = leaf_q.shape[2], leaf_q.shape[3]
+
+    def per_seg(lq, li, g, fr):
+        rc = jnp.clip(fr, 0, lq.shape[0] - 1)        # (Q, F)
+        cq = lq[rc]                                   # (Q, F, cap, d)
+        cli = li[rc]                                  # (Q, F, cap)
+        live = (cli >= 0) & (fr >= 0)[..., None]
+        cg = jnp.where(live, g[jnp.clip(cli, 0, n - 1)], -1)
+        return cq.reshape(qn, f * cap, dim), cg.reshape(qn, f * cap)
+
+    cq, cg = jax.vmap(per_seg)(leaf_q, leaf_index, gids, frontier)
+    out_sc = None
+    if qscale is not None:
+
+        def per_seg_sc(sc, fr):
+            rc = jnp.clip(fr, 0, sc.shape[0] - 1)
+            cs = jnp.broadcast_to(sc[rc][..., None], (qn, f, cap))
+            return cs.reshape(qn, f * cap)
+
+        out_sc = jax.vmap(per_seg_sc)(qscale, frontier).reshape(
+            s * qn, f * cap
+        )
+    return (
+        cq.reshape(s * qn, f * cap, dim),
+        cg.reshape(s * qn, f * cap),
+        out_sc,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _rescore_topk(dts: DeviceTree, frontier, queries, r, gq, slots, k: int):
+    """Exact second pass of the quantized read path: gather ONLY the k′
+    surviving slots' f32 rows, recompute their squared distances with
+    the f32 kernel's exact arithmetic (feature dim padded to the
+    128-lane block width — see `_leaf_sq`), and select the final top-k
+    by the same (squared, slot) lexicographic key under the same
+    conservative in-kernel gate + exact euclidean refinement. Given
+    candidate-set containment (checked by the caller), the output is
+    bit-identical to running `leaf_topk_l2` on the full f32 gather.
+
+    frontier: (S, Q, F) effective frontier; gq/slots: (S·Q, k′) the
+    quantized kernel's kept gids/slots. Returns per-row
+    ``(distances (S·Q, k), gids (S·Q, k), sorted_sq (S·Q, k′))`` — the
+    sorted gated rescored squares ride back out so the caller's
+    containment check can read the k-th best exactly as selected."""
+    s, qn, f = frontier.shape
+    cap = dts.leaf_points.shape[2]
+    kprime = slots.shape[1]
+    sl = slots.reshape(s, qn, kprime)
+
+    def per_seg(lp, fr, sl_):
+        slc = jnp.clip(sl_, 0, f * cap - 1)
+        fi = slc // cap                          # frontier position
+        pos = slc % cap                          # slot within the leaf
+        rank = jnp.take_along_axis(fr, fi, axis=1)
+        rank = jnp.clip(rank, 0, lp.shape[0] - 1)
+        return lp[rank, pos]                     # (Q, k′, d) f32 rows
+
+    rows = jax.vmap(per_seg)(dts.leaf_points, frontier, sl)  # (S,Q,k′,d)
+    d = rows.shape[-1]
+    dp = -(-d // 128) * 128
+    rows_p = jnp.pad(rows, [(0, 0)] * 3 + [(0, dp - d)])
+    q_p = jnp.pad(jnp.asarray(queries, jnp.float32), [(0, 0), (0, dp - d)])
+    diff = rows_p - q_p[None, :, None, :]
+    sq = jnp.maximum((diff * diff).sum(-1), 0.0)  # (S, Q, k′) exact f32
+    sq = sq.reshape(s * qn, kprime)
+
+    rb = jnp.broadcast_to(jnp.asarray(r, jnp.float32), (qn,))
+    rrows = jnp.broadcast_to(rb[None], (s, qn)).reshape(-1)  # (S·Q,)
+    # the f32 kernel's in-kernel state, reproduced on the survivors:
+    # liveness + conservative squared gate, masked lanes (+inf, I32MAX)
+    ok = (gq >= 0) & (sq <= _tk.radius_sq_upper(rrows)[:, None])
+    skey = jnp.where(ok, sq, jnp.inf)
+    slkey = jnp.where(ok, slots, np.iinfo(np.int32).max)
+    gkey = jnp.where(ok, gq, -1)
+    skey, slkey, gkey = jax.lax.sort(
+        (skey, slkey, gkey), dimension=1, num_keys=2
+    )
+    sq_k = skey[:, :k]
+    # exact euclidean refinement — same tail as `leaf_topk_l2`
+    dl = jnp.sqrt(sq_k)
+    okf = dl <= rrows[:, None]
+    dd = jnp.where(okf, dl, jnp.inf)
+    gg = jnp.where(okf, gkey[:, :k], -1)
+    return dd, gg, skey
+
+
 @functools.partial(jax.jit, static_argnames=("k",))
 def _merge_segments(dd, gg, k: int):
     """Fold the S per-segment sorted k-bests — same merge the classic
@@ -469,6 +565,49 @@ def _merge_segments(dd, gg, k: int):
     return qmerge.merge_parts(
         [(dd[s], gg[s]) for s in range(dd.shape[0])], k
     )
+
+
+QUANT_SLACK_DEFAULT = 8
+
+
+def quant_slack_default() -> int:
+    """Over-fetch slack of the quantized read path: the quantized
+    kernel keeps k′ = k + slack survivors so the exact f32 rescore has
+    room for quantization-induced rank shuffles near the k-boundary
+    (`REPRO_QUANT_SLACK` overrides). Exhausting the slack triggers the
+    counted all-f32 fallback — never truncation."""
+    return int(os.environ.get("REPRO_QUANT_SLACK", QUANT_SLACK_DEFAULT))
+
+
+def _quant_contained(sq_q, gq, rescored_sq, qerr: float, dim: int, k: int):
+    """Host-side containment certificate of the quantized candidate
+    set: True iff every row's exact top-k provably survived the
+    quantized k′-selection.
+
+    Per row, candidates the kernel EXCLUDED have quantized squared
+    distance >= T = the k′-th kept value (a bitwise fact of the
+    in-kernel selection), hence exact distance >= sqrt(T)/m - qerr
+    where `m` bounds the f32 evaluation slop of a padded length-`dim`
+    Σ(q-c)² and qerr the seal-time dequantization error. If the k-th
+    rescored survivor is strictly closer than that (with the same slop
+    margin on its own side), no excluded candidate can enter the final
+    top-k — even on ties, because exclusion is then STRICTLY farther.
+    Rows whose k′-window never filled with live candidates (n_live <
+    k′) excluded nothing that passed the widened radius gate, so they
+    are trivially contained."""
+    sq_q = np.asarray(sq_q)
+    gq = np.asarray(gq)
+    rs = np.asarray(rescored_sq)
+    kprime = sq_q.shape[1]
+    n_live = (gq >= 0).sum(axis=1)
+    window_open = n_live < kprime
+    # margin for f32 evaluation error of the squared-distance sums on
+    # BOTH sides of the comparison (generous: ~dim * 2^-22 relative)
+    m = 1.0 + max(dim, 1) * 2.0**-22
+    t = np.sqrt(np.maximum(sq_q[:, kprime - 1], 0.0))
+    s_k = np.sqrt(np.maximum(rs[:, k - 1], 0.0)) if k <= kprime else np.inf
+    gap_ok = s_k * m + qerr < t / m
+    return bool(np.all(window_open | gap_ok))
 
 
 def constrained_knn_stacked_fused(
@@ -479,6 +618,9 @@ def constrained_knn_stacked_fused(
     k: int,
     stack_size: int,
     frontier_cap: int | None = None,
+    leaf_q: jax.Array | None = None,   # (S, L, cap, d) quantized storage
+    qscale: jax.Array | None = None,   # (S, L) f32 int8 per-leaf scales
+    qerr: float = 0.0,                 # max seal-time dequant error bound
 ) -> StackedResult | None:
     """Two-phase fused traversal over S stacked segments: collect the
     pruned leaf frontier (phase 1), evaluate every surviving candidate
@@ -486,10 +628,23 @@ def constrained_knn_stacked_fused(
     device. Bit-identical to `constrained_knn_stacked` — results AND
     nodes/leaves/candidates counts.
 
+    When `leaf_q` is given (bf16, or int8 + `qscale`), phase 2 streams
+    the QUANTIZED buffer instead: the kernel over-fetches k′ = k +
+    slack survivors by quantized distance under a radius gate widened
+    by `qerr`, then `_rescore_topk` recomputes exact f32 distances for
+    just those survivors. A per-dispatch containment certificate
+    (`_quant_contained`) proves the quantized candidate set ⊇ the true
+    top-k; when the slack is exhausted the dispatch re-runs on the f32
+    buffer (counted on the registry as `quantized.rescore{result=
+    fallback}`) — results are bit-identical to the f32 path either
+    way, never truncated. Phase 1 always runs on f32 coordinates, so
+    pruning decisions and paper-metric counts are storage-independent.
+
     Returns None when some query's frontier overflowed `frontier_cap`
     (the recorded list would be truncated): the caller falls back to
     the classic path, which is exact at any frontier size.
     """
+    from repro import obs  # lazy: keep core import-light
     from repro.kernels import ops  # lazy: ops pulls in the obs registry
 
     if frontier_cap is None:
@@ -503,17 +658,55 @@ def constrained_knn_stacked_fused(
     # shrink the gather to the smallest pow2 class that holds the
     # widest frontier: bounds phase-2 memory at log2(fcap) jit classes
     f_eff = max(1, min(_tk._next_pow2(max(nf_max, 1)), frontier_cap))
-    qrows, cands, cgids, rrows = _gather_frontier(
-        dts, gids, queries, r, frontier[..., :f_eff]
-    )
+    frontier_eff = frontier[..., :f_eff]
     # pin bk to cover the whole feature dim: one k-chunk per block, so
     # the in-kernel Σ(q-c)² accumulates in a single pass — the same
     # rounding as the traversal's in-loop `((pts-q)**2).sum(-1)`. A
     # smaller autotuned bk would split the sum and break bit-parity;
     # bm/bn stay tunable (they never change the arithmetic).
     bk = _tk._round_up(max(int(queries.shape[1]), 1), 128)
-    dd, gg = ops.leaf_topk_l2(qrows, cands, cgids, rrows, k, bk=bk)
     s, qn = frontier.shape[0], frontier.shape[1]
+
+    dd = gg = None
+    if leaf_q is not None:
+        kprime = k + max(1, quant_slack_default())
+        cq, cg, csc = _gather_frontier_quantized(
+            leaf_q, dts.leaf_index, gids, frontier_eff, qscale
+        )
+        rb = jnp.broadcast_to(
+            jnp.asarray(r, jnp.float32), queries.shape[:1]
+        )
+        qrows = jnp.broadcast_to(
+            queries[None], (s, qn, queries.shape[1])
+        ).reshape(-1, queries.shape[1])
+        # widen the euclidean gate by the dequant bound so no true
+        # in-radius neighbor can fail the in-kernel quantized gate
+        rgate = jnp.broadcast_to(
+            (rb + jnp.float32(qerr))[None], (s, qn)
+        ).reshape(-1)
+        sq_q, gq, slots = ops.leaf_topk_l2_raw(
+            qrows, cq, cg, rgate, kprime, cscale=csc, bk=bk
+        )
+        dd_q, gg_q, rescored = _rescore_topk(
+            dts, frontier_eff, queries, r, gq, slots, k
+        )
+        if _quant_contained(sq_q, gq, rescored, qerr, queries.shape[1], k):
+            obs.REGISTRY.counter(
+                "quantized.rescore", result="exact"
+            ).inc()
+            dd, gg = dd_q, gg_q
+        else:
+            # slack exhausted: the certificate cannot prove the true
+            # top-k survived — re-run this dispatch on the f32 buffer
+            # (exact by construction, never truncates)
+            obs.REGISTRY.counter(
+                "quantized.rescore", result="fallback"
+            ).inc()
+    if dd is None:
+        qrows, cands, cgids, rrows = _gather_frontier(
+            dts, gids, queries, r, frontier_eff
+        )
+        dd, gg = ops.leaf_topk_l2(qrows, cands, cgids, rrows, k, bk=bk)
     d, g = _merge_segments(
         dd.reshape(s, qn, k), gg.reshape(s, qn, k), k
     )

@@ -16,10 +16,25 @@ static (one compiled program per capacity).
 
 All updates are functional (`jax.Array.at[...]`), so a `Snapshot` taken
 before a mutation keeps seeing its own consistent arrays for free.
+
+Double buffering: a snapshot pins the *front* arrays (`points`/`gids`)
+for in-flight queries, so a functional `.at[slots].set` on the front
+must copy the whole arena before the append lands. The arena therefore
+keeps a second, PRIVATE *back* pair holding identical contents that no
+snapshot can reference: the critical-path append scatters into the back
+pair — with buffer donation on TPU, an in-place device update that
+overlaps in-flight queries still reading the old front — and the result
+becomes the new front. A copy-scatter on the old front (off the
+critical path; queries stop referencing it as their snapshots retire)
+rebuilds the next private back, restoring the front==back invariant.
+On non-TPU backends donation is skipped (interpret-mode tests share
+buffers freely), which degrades to two functional copies — correct,
+just not overlapped.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import numpy as np
 
@@ -30,12 +45,30 @@ from repro import obs
 from repro.kernels import ops
 
 
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _scatter_donated(points, gids, slots, pts, g):
+    """In-place append on a buffer nothing else references."""
+    return points.at[slots].set(pts), gids.at[slots].set(g)
+
+
+@jax.jit
+def _scatter_copy(points, gids, slots, pts, g):
+    """Functional append: leaves the inputs (snapshot-visible) intact."""
+    return points.at[slots].set(pts), gids.at[slots].set(g)
+
+
 @dataclasses.dataclass(frozen=True)
 class DeltaBuffer:
-    points: jax.Array  # (capacity, d) f32
+    points: jax.Array  # (capacity, d) f32 — the FRONT: what snapshots see
     gids: jax.Array    # (capacity,) i32 global id; -1 = empty or dead
     size: int          # append cursor (slots ever used)
     n_dead: int = 0    # tombstoned slots among the first `size`
+    # back pair: same contents as the front, owned exclusively by this
+    # DeltaBuffer value (no snapshot ever references it), so the next
+    # append may scatter into it in place
+    back_points: jax.Array = None
+    back_gids: jax.Array = None
+    back_private: bool = True
 
     @staticmethod
     def empty(capacity: int, dim: int) -> "DeltaBuffer":
@@ -43,6 +76,8 @@ class DeltaBuffer:
             points=jnp.zeros((capacity, dim), jnp.float32),
             gids=jnp.full((capacity,), -1, jnp.int32),
             size=0,
+            back_points=jnp.zeros((capacity, dim), jnp.float32),
+            back_gids=jnp.full((capacity,), -1, jnp.int32),
         )
 
     @property
@@ -62,27 +97,67 @@ class DeltaBuffer:
         return self.size - self.n_dead
 
     def append(self, pts: np.ndarray, gids: np.ndarray) -> "DeltaBuffer":
-        """Write `pts` into the next free slots. Caller checks `free`."""
+        """Write `pts` into the next free slots. Caller checks `free`.
+
+        Critical path: one scatter into the private back pair (donated
+        in place on TPU) whose result becomes the new front — in-flight
+        queries keep reading the old front untouched. The replacement
+        back is rebuilt by a copy-scatter on the old front, off the
+        critical path."""
         m = int(pts.shape[0])
         if m > self.free:  # raise, not assert: must survive python -O
             raise ValueError(f"delta overflow: {m} points, {self.free} free")
-        slots = np.arange(self.size, self.size + m)
+        slots = jnp.asarray(
+            np.arange(self.size, self.size + m, dtype=np.int32)
+        )
+        pts_d = jnp.asarray(pts, jnp.float32)
+        g_d = jnp.asarray(np.asarray(gids), jnp.int32)
+        # an aborted writer may have donated THIS buffer's back pair
+        # before the abort published nothing — fall back to scattering
+        # off the (always valid) front in that case
+        back_ok = not getattr(self.back_points, "is_deleted", lambda: False)()
+        src_p = self.back_points if back_ok else self.points
+        src_g = self.back_gids if back_ok else self.gids
+        inplace = (
+            self.back_private
+            and back_ok
+            and jax.default_backend() == "tpu"
+        )
+        scatter = _scatter_donated if inplace else _scatter_copy
+        front_p, front_g = scatter(src_p, src_g, slots, pts_d, g_d)
+        # off the critical path: the old front still holds the same
+        # pre-append contents the back did, so the same scatter on it
+        # (always functional — snapshots may reference it) yields the
+        # next private back
+        back_p, back_g = _scatter_copy(
+            self.points, self.gids, slots, pts_d, g_d
+        )
+        if obs.REGISTRY.enabled:
+            obs.REGISTRY.counter(
+                "delta.double_buffer",
+                path="inplace" if inplace else "copy",
+            ).inc()
         return dataclasses.replace(  # replace: n_dead must carry over
             self,
-            points=self.points.at[slots].set(jnp.asarray(pts, jnp.float32)),
-            gids=self.gids.at[slots].set(
-                jnp.asarray(np.asarray(gids), jnp.int32)
-            ),
+            points=front_p,
+            gids=front_g,
             size=self.size + m,
+            back_points=back_p,
+            back_gids=back_g,
+            back_private=True,
         )
 
     def tombstone(self, slots: np.ndarray) -> "DeltaBuffer":
         """Mark slots dead (their points stop matching any query). The
-        locator pops each gid exactly once, so every slot here was live."""
+        locator pops each gid exactly once, so every slot here was live.
+        Both pairs take the mask so the front==back invariant holds."""
         slots = np.asarray(slots)
+        back_ok = not getattr(self.back_gids, "is_deleted", lambda: False)()
+        bg = self.back_gids if back_ok else self.gids
         return dataclasses.replace(
             self,
             gids=self.gids.at[slots].set(-1),
+            back_gids=bg.at[slots].set(-1),
             n_dead=self.n_dead + len(slots),
         )
 

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from repro.core import build
 from repro.core import search_jax as sj
 from repro.core.types import Tree, TreeSpec
+from repro.kernels import quantize
 from repro.query import shapes
 
 # Monotonic content token: stamped at every seal/merge AND refreshed by
@@ -54,6 +55,15 @@ class Segment:
     live: np.ndarray           # (n,) bool host mask (False = tombstoned)
     token: int                 # unique id of this device-array version
     n_dead: int = 0
+    # quantized leaf storage (the fused traversal's phase-2 stream):
+    # encoded once at seal/merge from the PADDED dtree leaf buffer, so
+    # shapes line up with leaf_index and the stacked engine batches.
+    # None/0.0 when storage_dtype == "float32" (the DeviceTree's own
+    # f32 buffer IS the storage).
+    leaf_q: object = None          # (L, cap, d) storage dtype or None
+    qscale: object = None          # (L,) f32 per-leaf scales (int8) or None
+    qerr: float = 0.0              # seal-time euclidean dequant bound
+    storage_dtype: str = "float32"
 
     @staticmethod
     def from_points(
@@ -61,6 +71,7 @@ class Segment:
         gids: np.ndarray,
         spec: TreeSpec,
         backend: str = "jax",
+        storage_dtype: str = "float32",
     ) -> "Segment":
         points = np.asarray(points, np.float32)
         n = points.shape[0]
@@ -73,9 +84,16 @@ class Segment:
         # segment in a class shares one compiled traversal, so the jit
         # cache is bounded by log2(N) classes instead of growing with
         # every novel merge size
+        dtree = shapes.pad_device_tree(sj.device_tree(tree))
+        # quantize the padded buffer (not the raw tree's): leaf ranks
+        # and slot layout then match leaf_index exactly, and every
+        # segment in a shape class quantizes to ONE stackable shape
+        leaf_q, qscale, qerr = quantize.quantize_leaves(
+            np.asarray(dtree.leaf_points), storage_dtype
+        )
         return Segment(
             tree=tree,
-            dtree=shapes.pad_device_tree(sj.device_tree(tree)),
+            dtree=dtree,
             stack_size=shapes.padded_stack_size(sj.max_depth(tree)),
             gids=np.asarray(gids, np.int64),
             gids_dev=shapes.pad_gids(
@@ -84,6 +102,10 @@ class Segment:
             slot_of_local=slot_of_local,
             live=np.ones(n, bool),
             token=next(_TOKENS),
+            leaf_q=leaf_q,
+            qscale=qscale,
+            qerr=qerr,
+            storage_dtype=quantize.check_dtype(storage_dtype),
         )
 
     @property
@@ -137,13 +159,20 @@ def plan_merges(
 
 
 def merge_segments(
-    segments: Sequence[Segment], spec: TreeSpec, backend: str = "jax"
+    segments: Sequence[Segment],
+    spec: TreeSpec,
+    backend: str = "jax",
+    storage_dtype: str = "float32",
 ) -> Segment | None:
     """Rebuild the union of live points as one segment (purges tombstones).
-    Returns None when every point in the group is dead."""
+    Returns None when every point in the group is dead. Merges re-encode
+    from the exact f32 points (`live_points` reads the host tree, never
+    the quantized buffer), so error never compounds across generations."""
     parts = [s.live_points() for s in segments]
     pts = np.concatenate([p for p, _ in parts])
     gids = np.concatenate([g for _, g in parts])
     if len(pts) == 0:
         return None
-    return Segment.from_points(pts, gids, spec, backend=backend)
+    return Segment.from_points(
+        pts, gids, spec, backend=backend, storage_dtype=storage_dtype
+    )

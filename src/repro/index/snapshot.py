@@ -30,6 +30,13 @@ class SegmentView:
     n_live: int
     token: int            # unique id of this device-array version — the
     #                       query engine's stacked-batch cache key
+    # quantized leaf storage (None / 0.0 when storage is f32): the
+    # fused traversal's phase-2 scan streams leaf_q instead of the
+    # f32 leaf buffer, then rescores survivors from dtree.leaf_points
+    leaf_q: object = None
+    qscale: object = None
+    qerr: float = 0.0
+    storage_dtype: str = "float32"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +50,10 @@ class Snapshot:
     delta_gids: jax.Array    # (capacity,) i32, -1 = empty/dead
     delta_size: int          # append cursor at capture time
     delta_n_live: int        # live (non-tombstoned) delta points
+    epoch: int = 0           # gid-remap epoch at capture (tombstones.py):
+    #                          bumps when merges move gids between
+    #                          segments, so gid-keyed caches built
+    #                          against an older epoch must be dropped
 
     @property
     def n_parts(self) -> int:

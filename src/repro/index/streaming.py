@@ -29,12 +29,14 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import os
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro import obs
 from repro.core.types import TreeSpec
+from repro.kernels import quantize
 
 from . import search as search_mod
 from .delta import DeltaBuffer
@@ -51,10 +53,21 @@ class StreamingConfig:
     merge_factor: int = 4             # size-tiered fanout (>= 2)
     backend: str = "jax"              # tree builder backend for seals/merges
     purge_fraction: float = 0.5       # rebuild a segment once this dead
+    # sealed-segment coordinate storage width (the DEFAULT read path is
+    # quantized): "bfloat16" halves phase-2 stream bytes with results
+    # still bit-identical to f32 (over-fetch + exact f32 rescore, see
+    # kernels/quantize.py); "int8" quarters them; "float32" opts out.
+    # REPRO_STORAGE_DTYPE overrides for A/B runs without code changes.
+    storage_dtype: Optional[str] = None
 
     def __post_init__(self) -> None:
         if self.spec is None:
             self.spec = TreeSpec.ballstar()
+        if self.storage_dtype is None:
+            self.storage_dtype = os.environ.get(
+                "REPRO_STORAGE_DTYPE", "bfloat16"
+            )
+        quantize.check_dtype(self.storage_dtype)
         # raise, not assert: must survive python -O
         if self.merge_factor < 2:
             raise ValueError("geometric tiering needs merge_factor >= 2")
@@ -213,7 +226,8 @@ class StreamingIndex:
                 self._install(
                     segments,
                     Segment.from_points(
-                        pts, gids, self.config.spec, backend=self.config.backend
+                        pts, gids, self.config.spec, backend=self.config.backend,
+                        storage_dtype=self.config.storage_dtype,
                     ),
                 )
                 # repeated bulk loads must still respect the tier bound
@@ -274,10 +288,12 @@ class StreamingIndex:
                 self._install(
                     segments,
                     Segment.from_points(
-                        pts, gids, self.config.spec, backend=self.config.backend
+                        pts, gids, self.config.spec, backend=self.config.backend,
+                        storage_dtype=self.config.storage_dtype,
                     ),
                 )
             self._c_compactions.inc()
+            self.log.bump_epoch()  # full remap: every gid moved holders
             self._commit(delta, segments)
         except BaseException:
             self._recover_log()
@@ -300,6 +316,10 @@ class StreamingIndex:
                     gids_dev=s.gids_dev,
                     n_live=s.n_live,
                     token=s.token,
+                    leaf_q=s.leaf_q,
+                    qscale=s.qscale,
+                    qerr=s.qerr,
+                    storage_dtype=s.storage_dtype,
                 )
                 for s in state.segments.values()
             ),
@@ -307,6 +327,7 @@ class StreamingIndex:
             delta_gids=state.delta.gids,
             delta_size=state.delta.size,
             delta_n_live=state.delta.n_live,
+            epoch=self.log.epoch,
         )
 
     def constrained_knn(self, queries, k: int, r) -> search_mod.StreamResult:
@@ -327,6 +348,10 @@ class StreamingIndex:
         state = self._state
         log = TombstoneLog()
         log.next_gid = self.log.next_gid
+        # carry the remap epoch forward, +1: an aborted mutation may
+        # have handed out mappings that never committed, so force
+        # gid-keyed caches to resync (over-invalidation is safe)
+        log._epoch = self.log.epoch + 1
         for uid, seg in state.segments.items():
             locals_ = np.nonzero(seg.live)[0]
             log.place_segment(uid, seg.gids[locals_], locals_)
@@ -366,7 +391,8 @@ class StreamingIndex:
             self._install(
                 segments,
                 Segment.from_points(
-                    pts, gids, self.config.spec, backend=self.config.backend
+                    pts, gids, self.config.spec, backend=self.config.backend,
+                    storage_dtype=self.config.storage_dtype,
                 ),
             )
             self._c_seals.inc()
@@ -396,7 +422,10 @@ class StreamingIndex:
                 return delta, segments
             for group in groups:
                 merged = merge_segments(
-                    [segs[i] for i in group], cfg.spec, backend=cfg.backend
+                    [segs[i] for i in group],
+                    cfg.spec,
+                    backend=cfg.backend,
+                    storage_dtype=cfg.storage_dtype,
                 )
                 for i in group:
                     del segments[uids[i]]
@@ -404,4 +433,8 @@ class StreamingIndex:
                     self._install(segments, merged)
                 self._c_merges[kind].inc()
                 self._c_segments_merged.inc(len(group))
+            # gids just moved holders: stamp a new remap epoch so
+            # gid-keyed caches (stacked batches, value arenas) drop
+            # state derived from the pre-merge layout
+            self.log.bump_epoch()
             # loop: the merged segment may tip the next tier over factor

@@ -28,6 +28,19 @@ class TombstoneLog:
         self._loc: Dict[int, Tuple[int, int]] = {}
         self.next_gid = 0
         self.n_deleted = 0
+        # version epoch: bumped whenever segment membership is REMAPPED
+        # (merges/compactions move gids between holders). Downstream
+        # gid-keyed caches — the query engine's stacked batches, the
+        # Datastore's values arena — compare epochs instead of diffing
+        # the whole locator to learn "your gid->location map is stale".
+        self._epoch = 0
+
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    def bump_epoch(self) -> None:
+        self._epoch += 1
 
     # -- id assignment ------------------------------------------------------
     def assign(self, n: int) -> np.ndarray:

@@ -64,6 +64,9 @@ _CANDIDATES = {
     },
 }
 
+# every planner takes `itemsize` (the streamed buffer's storage width):
+# quantized streams rank candidate blocks by their TRUE byte traffic
+# and size VMEM for the narrow buffer they actually hold
 _PLANNERS: dict[str, Callable[..., dict]] = {
     "topk_l2": lambda m, n, d, k, **bw: _tk.block_plan(m, n, d, k, **bw),
     "leaf_topk_l2": lambda m, n, d, k, **bw: _tk.leaf_block_plan(
@@ -140,7 +143,9 @@ def score(plan: dict) -> float:
     return max(t_comp, t_mem) + plan["blocks"] * LAUNCH_OVERHEAD_S
 
 
-def _rank(kernel: str, m: int, n: int, d: int, k: int) -> list[dict]:
+def _rank(
+    kernel: str, m: int, n: int, d: int, k: int, itemsize: int = 4
+) -> list[dict]:
     """All candidate plans for the shape, deduped post-clamp, feasible
     VMEM only, cheapest analytic score first."""
     planner = _PLANNERS[kernel]
@@ -149,7 +154,9 @@ def _rank(kernel: str, m: int, n: int, d: int, k: int) -> list[dict]:
     for bm in cand["bm"]:
         for bn in cand["bn"]:
             for bk in cand["bk"]:
-                p = planner(m, n, d, k, bm=bm, bn=bn, bk=bk)
+                p = planner(
+                    m, n, d, k, bm=bm, bn=bn, bk=bk, itemsize=itemsize
+                )
                 key = (p["bm"], p["bn"], p["bk"])
                 if key in seen:
                     continue
@@ -209,13 +216,18 @@ def choose_plan(
     hit = _CACHE.get(key)
     if hit is not None:
         return hit
+    import jax.numpy as jnp
+
+    itemsize = jnp.dtype(dtype).itemsize
     if pinned is not None:
         bm, bn, bk = pinned
-        plan = _PLANNERS[kernel](m, n, d, k, bm=bm, bn=bn, bk=bk)
+        plan = _PLANNERS[kernel](
+            m, n, d, k, bm=bm, bn=bn, bk=bk, itemsize=itemsize
+        )
         plan["score"] = score(plan)
         plan["source"] = "env"
     else:
-        ranked = _rank(kernel, m, n, d, k)
+        ranked = _rank(kernel, m, n, d, k, itemsize)
         plan = ranked[0]
         plan["source"] = "analytic"
         if measure is not None:

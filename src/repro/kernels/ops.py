@@ -20,17 +20,28 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def _tuned(kernel: str, m: int, n: int, d: int, k: int, kw: dict):
+def _tuned(
+    kernel: str,
+    m: int,
+    n: int,
+    d: int,
+    k: int,
+    kw: dict,
+    dtype: str = "float32",
+):
     """Fill the block sizes the caller did NOT pin with the autotuner's
     choice (an explicit bm/bn/bk always wins, per key — e.g. the fused
-    traversal pins bk for exactness and lets bm/bn tune). Returns the
-    chosen plan, or None when nothing needed tuning."""
+    traversal pins bk for exactness and lets bm/bn tune). `dtype` is
+    the STORAGE dtype of the streamed buffer: it keys the cache and
+    sets the planner's itemsize, so bf16/int8 streams rank blocks by
+    their true bytes. Returns the chosen plan, or None when nothing
+    needed tuning."""
     missing = [b for b in ("bm", "bn", "bk") if b not in kw]
     if not (m and n) or not missing:
         return None
     from . import autotune as _at  # lazy: autotune imports the planners
 
-    plan = _at.choose_plan(kernel, m, n, d, k)
+    plan = _at.choose_plan(kernel, m, n, d, k, dtype=dtype)
     for b in missing:
         kw[b] = plan[b]
     return plan
@@ -107,6 +118,38 @@ def leaf_topk_l2(q, cands, cgids, r, k, **kw):
             "leaf_topk_l2", _tk.leaf_block_plan(m, c, d, k, **_blocks(kw))
         )
     return _tk.leaf_topk_l2(q, cands, cgids, r, k, **kw)
+
+
+def leaf_topk_l2_raw(q, cands, cgids, r, k, cscale=None, **kw):
+    """Quantized-storage selection pass: streams `cands` at its storage
+    width (f32 / bf16 / int8 + per-candidate `cscale`) and returns the
+    raw (squared, gid, slot) k-best per row — the over-fetch half of
+    the quantized read path; `core/search_jax` rescores the surviving
+    slots in f32. Bills HBM bytes at the TRUE storage width and tracks
+    the f32-equivalent bytes the quantized stream avoided, feeding the
+    obs `quantized` section."""
+    kw.setdefault("interpret", _interpret())
+    m, d = q.shape
+    c = cands.shape[1]
+    sdt = str(jnp.dtype(cands.dtype))
+    _tuned("leaf_topk_l2", m, c, d, k, kw, dtype=sdt)
+    if obs.REGISTRY.enabled and _concrete(q, cands, cgids) and m and c:
+        itemsize = jnp.dtype(cands.dtype).itemsize
+        plan = _tk.leaf_block_plan(
+            m, c, d, k, itemsize=itemsize, **_blocks(kw)
+        )
+        _account("leaf_topk_l2_raw", plan)
+        # quantized-vs-f32 stream accounting: what this launch streamed
+        # at storage width vs what the same launch would have at f32
+        f32_plan = _tk.leaf_block_plan(m, c, d, k, **_blocks(kw))
+        reg = obs.REGISTRY
+        reg.counter("quantized.stream_bytes", dtype=sdt).inc(
+            plan["stream_bytes"]
+        )
+        reg.counter("quantized.f32_stream_bytes", dtype=sdt).inc(
+            f32_plan["stream_bytes"]
+        )
+    return _tk.leaf_topk_l2_raw(q, cands, cgids, r, k, cscale=cscale, **kw)
 
 
 def lower_bounds(q, centers, radii, **kw):

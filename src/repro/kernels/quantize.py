@@ -1,0 +1,116 @@
+"""Quantized segment-coordinate storage: seal-time encode + error bound.
+
+Sealed segments store their leaf coordinate buffer at a narrow width so
+the fused traversal's phase-2 scan (`leaf_topk_l2_raw`) streams fewer
+HBM bytes — the dominant traffic of the input-read-bound leaf kernel.
+Exactness is NOT traded away: quantization only shapes *candidate
+generation*. The kernel over-fetches k′ = k + slack survivors by
+quantized distance, a rescore pass recomputes exact f32 distances for
+just those survivors, and a per-segment error bound (`qerr`, computed
+here at seal time in f64) certifies that the quantized top-k′ set
+contains the true top-k — falling back to the all-f32 kernel when the
+slack is exhausted, never truncating.
+
+Supported storage dtypes:
+
+  * ``float32``  — identity (no side buffer, qerr = 0);
+  * ``bfloat16`` — truncate-to-nearest cast, dequant is a plain widen.
+    Relative coordinate error <= 2^-8; safe everywhere;
+  * ``int8``     — symmetric per-LEAF scale ``max|coord| / 127``
+    (f32, broadcast per candidate at stream time), dequant
+    ``q * scale``. Good when coordinates within a leaf share magnitude
+    (clustered data after the ball*-tree's PCA splits); degrades —
+    i.e. qerr grows and the rescore falls back more — when a leaf
+    mixes magnitudes across dimensions.
+
+The error bound is the max euclidean distance between any stored row
+and its dequantized image, so for any query q and point p:
+``|d(q, p) - d(q, p~)| <= ||p - p~|| <= qerr`` (triangle inequality).
+A small multiplicative safety factor absorbs the f64->f32 boundary.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax.numpy as jnp
+
+SUPPORTED = ("float32", "bfloat16", "int8")
+
+# safety factor on the seal-time error bound: the bound itself is
+# computed in f64 over the exact stored rows, the margin absorbs its
+# own f32 rounding when it re-enters device arithmetic
+_QERR_SLACK = 1.0 + 2.0**-10
+
+
+def check_dtype(storage_dtype: str) -> str:
+    if storage_dtype not in SUPPORTED:
+        raise ValueError(
+            f"storage_dtype {storage_dtype!r} not one of {SUPPORTED}"
+        )
+    return storage_dtype
+
+
+def quantize_leaves(
+    leaf_points: np.ndarray, storage_dtype: str
+) -> Tuple[Optional[jnp.ndarray], Optional[jnp.ndarray], float]:
+    """Encode a padded (L, cap, d) f32 leaf buffer for storage.
+
+    Returns ``(leaf_q, scale, qerr)``:
+
+      * ``leaf_q`` — (L, cap, d) in the storage dtype (None for f32:
+        the DeviceTree's own buffer IS the storage);
+      * ``scale`` — (L,) f32 per-leaf dequant scales (int8 only);
+      * ``qerr`` — conservative upper bound on the euclidean distance
+        between any stored row and its dequantized image (f64 at seal,
+        widened by `_QERR_SLACK`).
+    """
+    check_dtype(storage_dtype)
+    lp = np.asarray(leaf_points, np.float32)
+    if storage_dtype == "float32":
+        return None, None, 0.0
+    if storage_dtype == "bfloat16":
+        leaf_q = jnp.asarray(lp).astype(jnp.bfloat16)
+        deq = np.asarray(leaf_q.astype(jnp.float32), np.float64)
+        scale = None
+    else:  # int8: symmetric per-leaf scale, zero-safe
+        amax = np.abs(lp).max(axis=(1, 2)).astype(np.float32)  # (L,)
+        scale_np = np.where(amax > 0.0, amax / np.float32(127.0), 1.0)
+        scale_np = scale_np.astype(np.float32)
+        qs = np.clip(
+            np.rint(lp / scale_np[:, None, None]), -127, 127
+        ).astype(np.int8)
+        # dequant exactly as the kernel does: f32 widen, f32 multiply
+        deq = np.asarray(
+            qs.astype(np.float32) * scale_np[:, None, None], np.float64
+        )
+        leaf_q = jnp.asarray(qs)
+        scale = jnp.asarray(scale_np)
+    err = np.sqrt(
+        ((np.asarray(lp, np.float64) - deq) ** 2).sum(axis=-1)
+    ).max() if lp.size else 0.0
+    return leaf_q, scale, float(err * _QERR_SLACK)
+
+
+def dequantize(leaf_q: jnp.ndarray, scale=None) -> jnp.ndarray:
+    """f32 image of a stored buffer, with the kernel's exact rounding
+    (widen, then one f32 multiply by the broadcast scale)."""
+    out = jnp.asarray(leaf_q).astype(jnp.float32)
+    if scale is not None:
+        s = jnp.asarray(scale, jnp.float32)
+        out = out * s.reshape(s.shape + (1,) * (out.ndim - s.ndim))
+    return out
+
+
+def itemsize_of(storage_dtype: str) -> int:
+    return jnp.dtype(check_dtype(storage_dtype)).itemsize
+
+
+__all__ = [
+    "SUPPORTED",
+    "check_dtype",
+    "quantize_leaves",
+    "dequantize",
+    "itemsize_of",
+]

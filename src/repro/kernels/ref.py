@@ -74,6 +74,65 @@ def leaf_topk_l2(q, cands, cgids, r, k: int):
     return _select_rows(sq, dl, ok, jnp.asarray(cgids, jnp.int32), k)
 
 
+def leaf_topk_l2_raw(q, cands, cgids, r, k: int, cscale=None):
+    """Oracle for `kernels.topk_l2.leaf_topk_l2_raw`: dequantize the
+    stored candidates (bf16 widen, or int8 × per-candidate scale),
+    select the k smallest per row by the (squared distance, slot)
+    lexicographic key under the CONSERVATIVE squared gate
+    (`radius_sq_upper` of the pre-widened euclidean `r`), and return
+    the unrefined (squared, gid, slot) triple — exactly the quantized
+    kernel's contract, so the over-fetch + rescore path can be
+    property-tested end to end.
+
+    Bit-exactness caveat: the bf16 path matches the kernel bitwise
+    (dequant is a pure widen). The int8 path's dequant MULTIPLY may
+    FMA-contract differently in the kernel than in this eager graph,
+    so its squared keys can differ by ulps from the kernel's — tests
+    compare int8 at ulp tolerance. This is fine by design: quantized
+    keys only pick the k′ candidate set, and the rescore containment
+    check carries an arithmetic margin on top of the seal-time `qerr`
+    precisely so ulp-level slop in the quantized keys can never leak
+    into final results.
+
+    q: (R, D), cands: (R, C, D) storage dtype, cgids: (R, C) i32,
+    cscale: optional (R, C) f32.
+    """
+    from . import topk_l2 as _tk
+
+    q = jnp.asarray(q, jnp.float32)
+    c = jnp.asarray(cands).astype(jnp.float32)
+    if cscale is not None:
+        c = c * jnp.asarray(cscale, jnp.float32)[:, :, None]
+    rb = jnp.broadcast_to(jnp.asarray(r, jnp.float32), q.shape[:1])
+    # pad the feature dim to the kernel's 128-lane block width before
+    # reducing — same trick as core/search_jax._leaf_sq, so XLA cannot
+    # contract the tiny-d sum into differently-rounded FMAs than the
+    # kernel's full-lane reduction
+    d = int(q.shape[1])
+    dp = -(-d // 128) * 128
+    qp = jnp.zeros(q.shape[:1] + (dp,), jnp.float32).at[:, :d].set(q)
+    cp = jnp.zeros(c.shape[:2] + (dp,), jnp.float32).at[:, :, :d].set(c)
+    diff = qp[:, None, :] - cp
+    sq = (diff * diff).sum(-1)  # (R, C)
+    ok = (jnp.asarray(cgids) >= 0) & (
+        sq <= _tk.radius_sq_upper(rb)[:, None]
+    )
+    key = jnp.where(ok, sq, jnp.inf)
+    kk = min(k, int(sq.shape[1]))
+    order = jnp.argsort(key, axis=1)[:, :kk]
+    out_sq = jnp.take_along_axis(key, order, axis=1)
+    out_g = jnp.take_along_axis(jnp.asarray(cgids, jnp.int32), order, axis=1)
+    imax = jnp.iinfo(jnp.int32).max
+    out_g = jnp.where(jnp.isinf(out_sq), -1, out_g)
+    out_s = jnp.where(jnp.isinf(out_sq), imax, order.astype(jnp.int32))
+    if kk < k:
+        pad = ((0, 0), (0, k - kk))
+        out_sq = jnp.pad(out_sq, pad, constant_values=jnp.inf)
+        out_g = jnp.pad(out_g, pad, constant_values=-1)
+        out_s = jnp.pad(out_s, pad, constant_values=imax)
+    return out_sq, out_g, out_s
+
+
 def cov_matvec(x: jnp.ndarray, mean: jnp.ndarray, w: jnp.ndarray):
     """One centered-covariance power-iteration step: y = Xcᵀ (Xc w).
 

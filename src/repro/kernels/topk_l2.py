@@ -119,6 +119,7 @@ def block_plan(
     bm: int = 128,
     bn: int = 128,
     bk: int = 512,
+    itemsize: int = 4,
 ) -> dict:
     """Resolved launch geometry + analytic cost of one fused top-k call.
 
@@ -133,6 +134,11 @@ def block_plan(
     autotuner ranks on: padding waste, pipeline refetch traffic (the q
     tile is re-read once per N block, the p tile once per M block),
     and the VMEM working set.
+
+    `itemsize` is the STORAGE width (bytes/elem) of the streamed point
+    buffer — 4 for f32, 2 for bf16, 1 for int8 — so byte accounting
+    reflects what actually crosses HBM, not a hardcoded f32 width.
+    Queries, gids, and outputs stay f32/i32.
     """
     kp = _next_pow2(k)
     bm = min(bm, _round_up(m, 8))
@@ -154,16 +160,16 @@ def block_plan(
         + 2 * (m + n) * d
         + 8 * m * n * stages,
         # stream q, p, gids once; write the (Q, kp) d/gid/slot triple
-        "hbm_bytes": (m * d + n * d) * 4 + n * 4 + m * kp * 12,
+        "hbm_bytes": m * d * 4 + n * d * itemsize + n * 4 + m * kp * 12,
         # block-aware autotuner terms ------------------------------------
         "padded_flops": 2 * mp * np_ * dp
         + 2 * (mp + np_) * dp
         + 8 * mp * np_ * stages,
         "stream_bytes": mp * dp * 4 * grid[1]   # q refetched per N block
-        + (np_ * dp * 4 + np_ * 4) * grid[0]    # p+gids refetched per M
+        + (np_ * dp * itemsize + np_ * 4) * grid[0]  # p+gids per M block
         + mp * kp * 12,
-        "vmem_bytes": (bm * bk + bn * bk + bm * bn + 3 * bm * kp + bm + bn)
-        * 4,
+        "vmem_bytes": (bm * bk + bm * bn + 3 * bm * kp + bm + bn) * 4
+        + bn * bk * itemsize,
     }
 
 
@@ -401,12 +407,19 @@ def leaf_block_plan(
     bm: int = 8,
     bn: int = 128,
     bk: int = 512,
+    itemsize: int = 4,
 ) -> dict:
     """Launch geometry + analytic cost of one batched leaf-candidate
     call (`leaf_topk_l2`): each of the `r` rows scans its OWN (c, d)
     candidate matrix, so the distance block is a batched matvec and the
     candidate tensor itself dominates the stream. Mirrors the wrapper's
-    clamp logic exactly, like `block_plan` does for `topk_l2`."""
+    clamp logic exactly, like `block_plan` does for `topk_l2`.
+
+    `itemsize` is the candidate STORAGE width (4 = f32, 2 = bf16,
+    1 = int8). int8 candidates also stream a per-candidate f32 scale
+    row (the broadcast per-leaf scale), accounted below; queries, gids,
+    and the output triple stay f32/i32 regardless.
+    """
     kp = _next_pow2(k)
     bm = min(bm, _round_up(r, 8))
     bn = max(kp, min(_next_pow2(bn), _round_up(_next_pow2(c), 128)))
@@ -414,6 +427,8 @@ def leaf_block_plan(
     rp, cp, dp = _round_up(r, bm), _round_up(c, bn), _round_up(d, bk)
     grid = (rp // bm, cp // bn, dp // bk)
     stages = selection_stages(kp, bn)
+    # int8 is the only storage dtype that carries a dequant scale input
+    scale_bytes = rp * cp * 4 if itemsize == 1 else 0
     return {
         "kp": kp,
         "bm": bm,
@@ -424,24 +439,32 @@ def leaf_block_plan(
         # difference-form distances (sub, mul, add) + selection network
         "flops": 3 * r * c * d + 8 * r * c * stages,
         # q + per-row candidates + gids streamed once, (r, kp) triple out
-        "hbm_bytes": (r * d + r * c * d) * 4 + r * c * 4 + r * kp * 12,
+        "hbm_bytes": r * d * 4
+        + r * c * d * itemsize
+        + r * c * 4
+        + (r * c * 4 if itemsize == 1 else 0)
+        + r * kp * 12,
         "padded_flops": 3 * rp * cp * dp + 8 * rp * cp * stages,
         # candidates/gids are private per row — fetched exactly once;
         # only the q tile is re-read per C block
         "stream_bytes": rp * dp * 4 * grid[1]
-        + (rp * cp * dp * 4 + rp * cp * 4)
+        + (rp * cp * dp * itemsize + rp * cp * 4 + scale_bytes)
         + rp * kp * 12,
-        "vmem_bytes": (
-            bm * bk + bm * bn * bk + 2 * bm * bn + 3 * bm * kp + bm
-        )
-        * 4,
+        "vmem_bytes": (bm * bk + 2 * bm * bn + 3 * bm * kp + bm) * 4
+        + bm * bn * bk * itemsize
+        + (bm * bn * 4 if itemsize == 1 else 0),
     }
 
 
 def _leaf_kernel(
-    q_ref, c_ref, g_ref, r_ref, od_ref, og_ref, os_ref, acc_ref,
-    *, k_steps: int, kp: int, bm: int, bn: int
+    *refs, k_steps: int, kp: int, bm: int, bn: int, has_scale: bool
 ):
+    if has_scale:
+        (q_ref, c_ref, sc_ref, g_ref, r_ref,
+         od_ref, og_ref, os_ref, acc_ref) = refs
+    else:
+        q_ref, c_ref, g_ref, r_ref, od_ref, og_ref, os_ref, acc_ref = refs
+        sc_ref = None
     j = pl.program_id(1)
     kk = pl.program_id(2)
 
@@ -463,8 +486,15 @@ def _leaf_kernel(
     # small (F·cap candidates per row) and the scan is memory-bound on
     # the gathered candidate tensor, so the lost MXU matmul is not the
     # bottleneck here the way it is in the shared-points kernels.
+    #
+    # Candidates may arrive quantized (bf16, or int8 + per-candidate f32
+    # scale): they are widened to f32 right out of VMEM, so HBM streams
+    # the narrow buffer while the distance math stays f32. The over-
+    # fetch + exact-rescore pass downstream restores bit-exactness.
     q = q_ref[...].astype(jnp.float32)  # (bm, bk)
     c = c_ref[...].astype(jnp.float32)  # (bm, bn, bk)
+    if sc_ref is not None:
+        c = c * sc_ref[...][:, :, None]
     diff = q[:, None, :] - c
     acc_ref[...] += (diff * diff).sum(axis=2)
 
@@ -493,6 +523,84 @@ def _leaf_kernel(
         os_ref[...] = ms[:, :kp]
 
 
+def _leaf_call(
+    q, cands, cscale, cgids, r_sq, k, bm, bn, bk, interpret
+):
+    """Shared pallas_call body of the leaf-candidate kernels: pads to
+    block multiples (candidates in their STORAGE dtype — f32, bf16, or
+    int8 with a per-candidate f32 `cscale`), launches `_leaf_kernel`,
+    and returns the raw per-row ``(squared (R, k), gids (R, k),
+    slots (R, k))`` triple selected by the lexicographic
+    (squared distance, slot) key. `r_sq` is the ALREADY-squared
+    conservative in-kernel gate — callers widen it themselves
+    (`radius_sq_upper`, plus the quantization error bound on the
+    quantized path)."""
+    m, d = q.shape
+    m2, c, d2 = cands.shape
+    assert (m, d) == (m2, d2), (q.shape, cands.shape)
+    assert cgids.shape == (m, c), (cgids.shape, (m, c))
+    kp = _next_pow2(k)
+    bm = min(bm, _round_up(m, 8))
+    bn = max(kp, min(_next_pow2(bn), _round_up(_next_pow2(c), 128)))
+    bk = min(bk, _round_up(d, 128))
+    mp, cp, dp = _round_up(m, bm), _round_up(c, bn), _round_up(d, bk)
+    qpad = jnp.zeros((mp, dp), jnp.float32).at[:m, :d].set(
+        jnp.asarray(q, jnp.float32)
+    )
+    cpad = jnp.zeros((mp, cp, dp), cands.dtype).at[:m, :c, :d].set(cands)
+    gpad = jnp.full((mp, cp), -1, jnp.int32).at[:m, :c].set(
+        jnp.asarray(cgids, jnp.int32)
+    )
+    rpad = jnp.zeros((mp, 1), jnp.float32).at[:m, 0].set(
+        jnp.asarray(r_sq, jnp.float32)
+    )
+    k_steps = dp // bk
+    grid = (mp // bm, cp // bn, k_steps)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bm, bn, bk), lambda i, j, kk: (i, j, kk)),
+    ]
+    operands = [qpad, cpad]
+    if cscale is not None:
+        assert cscale.shape == (m, c), (cscale.shape, (m, c))
+        scpad = jnp.zeros((mp, cp), jnp.float32).at[:m, :c].set(
+            jnp.asarray(cscale, jnp.float32)
+        )
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+        operands.append(scpad)
+    in_specs += [
+        pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+    ]
+    operands += [gpad, rpad]
+    with jax.named_scope("kernel.leaf_topk_l2"):
+        out_d, out_g, out_s = pl.pallas_call(
+            functools.partial(
+                _leaf_kernel,
+                k_steps=k_steps,
+                kp=kp,
+                bm=bm,
+                bn=bn,
+                has_scale=cscale is not None,
+            ),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=[
+                pl.BlockSpec((bm, kp), lambda i, j, kk: (i, 0)),
+                pl.BlockSpec((bm, kp), lambda i, j, kk: (i, 0)),
+                pl.BlockSpec((bm, kp), lambda i, j, kk: (i, 0)),
+            ],
+            out_shape=[
+                jax.ShapeDtypeStruct((mp, kp), jnp.float32),
+                jax.ShapeDtypeStruct((mp, kp), jnp.int32),
+                jax.ShapeDtypeStruct((mp, kp), jnp.int32),
+            ],
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            interpret=interpret,
+        )(*operands)
+    return out_d[:m, :k], out_g[:m, :k], out_s[:m, :k]
+
+
 @functools.partial(
     jax.jit, static_argnames=("k", "bm", "bn", "bk", "interpret")
 )
@@ -518,62 +626,67 @@ def leaf_topk_l2(
     per row with (+inf, -1) fill, same contract as `topk_l2`.
     """
     m, d = q.shape
-    m2, c, d2 = cands.shape
-    assert (m, d) == (m2, d2), (q.shape, cands.shape)
-    assert cgids.shape == (m, c), (cgids.shape, (m, c))
-    if m == 0 or c == 0:
+    if m == 0 or cands.shape[1] == 0:
         return (
             jnp.full((m, k), jnp.inf, jnp.float32),
             jnp.full((m, k), -1, jnp.int32),
         )
-    kp = _next_pow2(k)
-    bm = min(bm, _round_up(m, 8))
-    bn = max(kp, min(_next_pow2(bn), _round_up(_next_pow2(c), 128)))
-    bk = min(bk, _round_up(d, 128))
-    mp, cp, dp = _round_up(m, bm), _round_up(c, bn), _round_up(d, bk)
-    qpad = jnp.zeros((mp, dp), jnp.float32).at[:m, :d].set(
-        jnp.asarray(q, jnp.float32)
-    )
-    cpad = jnp.zeros((mp, cp, dp), jnp.float32).at[:m, :c, :d].set(
-        jnp.asarray(cands, jnp.float32)
-    )
-    gpad = jnp.full((mp, cp), -1, jnp.int32).at[:m, :c].set(
-        jnp.asarray(cgids, jnp.int32)
-    )
     rb = jnp.broadcast_to(jnp.asarray(r, jnp.float32), (m,))
-    rpad = jnp.zeros((mp, 1), jnp.float32).at[:m, 0].set(
-        radius_sq_upper(rb)
+    sq, out_g, _slots = _leaf_call(
+        q,
+        jnp.asarray(cands, jnp.float32),
+        None,
+        cgids,
+        radius_sq_upper(rb),
+        k,
+        bm,
+        bn,
+        bk,
+        interpret,
     )
-    k_steps = dp // bk
-    grid = (mp // bm, cp // bn, k_steps)
-    with jax.named_scope("kernel.leaf_topk_l2"):
-        out_d, out_g, _slots = pl.pallas_call(
-            functools.partial(
-                _leaf_kernel, k_steps=k_steps, kp=kp, bm=bm, bn=bn
-            ),
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-                pl.BlockSpec((bm, bn, bk), lambda i, j, kk: (i, j, kk)),
-                pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-                pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
-            ],
-            out_specs=[
-                pl.BlockSpec((bm, kp), lambda i, j, kk: (i, 0)),
-                pl.BlockSpec((bm, kp), lambda i, j, kk: (i, 0)),
-                pl.BlockSpec((bm, kp), lambda i, j, kk: (i, 0)),
-            ],
-            out_shape=[
-                jax.ShapeDtypeStruct((mp, kp), jnp.float32),
-                jax.ShapeDtypeStruct((mp, kp), jnp.int32),
-                jax.ShapeDtypeStruct((mp, kp), jnp.int32),
-            ],
-            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-            interpret=interpret,
-        )(qpad, cpad, gpad, rpad)
-    sq = out_d[:m, :k]
     dl = jnp.sqrt(sq)
     ok = dl <= rb[:, None]
     dd = jnp.where(ok, dl, jnp.inf)
-    gg = jnp.where(ok, out_g[:m, :k], -1)
+    gg = jnp.where(ok, out_g, -1)
     return dd, gg
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "bm", "bn", "bk", "interpret")
+)
+def leaf_topk_l2_raw(
+    q: jax.Array,       # (R, D) one row per (segment, query) pair
+    cands: jax.Array,   # (R, C, D) candidates in STORAGE dtype
+    cgids: jax.Array,   # (R, C) i32 ids; negative = hole / dead slot
+    r,                  # scalar or (R,) euclidean gate, PRE-widened
+    k: int,
+    *,
+    cscale: jax.Array | None = None,  # (R, C) f32 int8 dequant scales
+    bm: int = 8,
+    bn: int = 128,
+    bk: int = 512,
+    interpret: bool = False,
+):
+    """Raw selection pass over possibly-quantized candidates: streams
+    `cands` at its storage width (f32 / bf16 / int8 + `cscale`), keeps
+    the k smallest by the (squared distance, slot) key, and returns the
+    UNREFINED ``(squared (R, k) f32, gids (R, k) i32, slots (R, k)
+    i32)`` triple — squared distances of the *dequantized* coordinates,
+    no sqrt, no exact radius mask. The caller over-fetches (k = k′ =
+    k + slack), rescores the surviving slots against the f32 rows, and
+    applies the exact gate there. `r` must already include the
+    quantization error bound (the wrapper squares it conservatively via
+    `radius_sq_upper`), so no true in-radius neighbor can fail the
+    in-kernel gate."""
+    m, d = q.shape
+    if m == 0 or cands.shape[1] == 0:
+        return (
+            jnp.full((m, k), jnp.inf, jnp.float32),
+            jnp.full((m, k), -1, jnp.int32),
+            jnp.full((m, k), _I32_MAX, jnp.int32),
+        )
+    rb = jnp.broadcast_to(jnp.asarray(r, jnp.float32), (m,))
+    return _leaf_call(
+        q, cands, cscale, cgids, radius_sq_upper(rb), k, bm, bn, bk,
+        interpret,
+    )

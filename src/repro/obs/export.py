@@ -17,7 +17,11 @@ writes per-section `BENCH_<section>.json` files; this module writes the
       },
       "autotune": {"<kernel>/<shape-class>/k<k>/<dtype>/<backend>":
                    {"bm": ..., "bn": ..., "bk": ..., "grid": [...],
-                    "blocks": ..., "pred_us": ..., "source": ...}, ...}
+                    "blocks": ..., "pred_us": ..., "source": ...}, ...},
+      "quantized": {"<storage dtype>":
+                    {"storage_dtype": ..., "bytes_quantized": ...,
+                     "bytes_f32_equiv": ..., "reduction_factor": ...,
+                     "rescore_exact": ..., "rescore_fallback": ...}, ...}
     }
 
 Histogram buckets are sparse ``[log2 upper edge, count]`` pairs on the
@@ -49,7 +53,37 @@ def to_payload(registry: Optional[metrics.Registry] = None) -> dict:
         "generated_unix": time.time(),
         "obs": reg.snapshot(),
         "autotune": autotune.decisions(),
+        "quantized": quantized_summary(reg),
     }
+
+
+def quantized_summary(registry: Optional[metrics.Registry] = None) -> dict:
+    """Per storage dtype: bytes actually streamed by the quantized leaf
+    scans (billed at TRUE storage width), the f32-equivalent bytes the
+    same launches would have streamed, their ratio, and the rescore
+    certificate outcomes (exact vs whole-dispatch f32 fallback — the
+    fallback re-runs and recounts, it never truncates)."""
+    reg = registry or metrics.REGISTRY
+    counters = reg.snapshot()["counters"]
+    out = {}
+    for key, val in counters.items():
+        if not key.startswith("quantized.stream_bytes{"):
+            continue
+        dt = key[len("quantized.stream_bytes{dtype=") : -1]
+        f32 = counters.get(f"quantized.f32_stream_bytes{{dtype={dt}}}", 0)
+        out[dt] = {
+            "storage_dtype": dt,
+            "bytes_quantized": int(val),
+            "bytes_f32_equiv": int(f32),
+            "reduction_factor": (f32 / val) if val else 0.0,
+            "rescore_exact": int(
+                counters.get("quantized.rescore{result=exact}", 0)
+            ),
+            "rescore_fallback": int(
+                counters.get("quantized.rescore{result=fallback}", 0)
+            ),
+        }
+    return out
 
 
 def dump_json(path: str, registry: Optional[metrics.Registry] = None) -> str:
@@ -92,4 +126,10 @@ def table(snap: Optional[dict] = None) -> str:
     return "\n".join(lines) if lines else "(registry empty)"
 
 
-__all__ = ["dump_json", "load_json", "table", "to_payload"]
+__all__ = [
+    "dump_json",
+    "load_json",
+    "table",
+    "to_payload",
+    "quantized_summary",
+]

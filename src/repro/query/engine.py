@@ -151,7 +151,10 @@ def plan(snapshot) -> List[ClassGroup]:
         if view.n_live == 0:  # fully tombstoned: nothing to dispatch
             continue
         cls = shapes.shape_class_of(
-            view.dtree, view.stack_size, int(view.gids_dev.shape[0])
+            view.dtree,
+            view.stack_size,
+            int(view.gids_dev.shape[0]),
+            storage_dtype=getattr(view, "storage_dtype", "float32"),
         )
         groups.setdefault(cls, []).append(view)
     return [
@@ -161,8 +164,10 @@ def plan(snapshot) -> List[ClassGroup]:
 
 
 # -- stacked-batch cache -----------------------------------------------------
-# LRU keyed on (class, member-token set). Segments are always f32
-# (sealed by Segment.from_points), so dtype is not part of the key. Per
+# LRU keyed on (class, gid-remap epoch, member-token set). The class
+# carries the segments' STORAGE dtype (`ShapeClass.sdt`), so batches of
+# different storage widths — whose leaf_q buffers could never
+# concatenate — can never collide on one key. Per
 # class at most TWO batches are retained — the current one plus the
 # most recently used predecessor, which an MVCC reader holding an older
 # snapshot may still be alternating with; older superseded batches are
@@ -186,6 +191,11 @@ class _StackEntry(NamedTuple):
     stacked: sj.DeviceTree  # (S_pow2, …) batch, dummy-padded
     gids: jnp.ndarray       # (S_pow2, n) gid table
     slot_tokens: tuple      # token occupying each real (non-dummy) slot
+    # quantized leaf storage of the batch, stacked alongside the trees
+    # (None for f32 classes; qscale None unless the dtype carries
+    # per-leaf scales)
+    leaf_q: object = None   # (S_pow2, L, cap, d) storage dtype
+    qscale: object = None   # (S_pow2, L) f32
 
 
 def stack_stats() -> dict:
@@ -216,6 +226,7 @@ def _incremental_update(
     if len(free) != len(fresh):
         return None
     stacked, gids = base.stacked, base.gids
+    leaf_q, qscale = base.leaf_q, base.qscale
     slot_tokens = list(base.slot_tokens)
     for s, view in zip(free, fresh):
         stacked = sj.DeviceTree(
@@ -225,19 +236,28 @@ def _incremental_update(
             ]
         )
         gids = gids.at[s].set(view.gids_dev)
+        if leaf_q is not None:
+            leaf_q = leaf_q.at[s].set(view.leaf_q)
+            if qscale is not None:
+                qscale = qscale.at[s].set(view.qscale)
         slot_tokens[s] = view.token
-    return _StackEntry(stacked, gids, tuple(slot_tokens))
+    return _StackEntry(stacked, gids, tuple(slot_tokens), leaf_q, qscale)
 
 
-def _stacked_views(group: ClassGroup) -> Tuple[sj.DeviceTree, jnp.ndarray]:
-    """(S_pow2, …)-stacked DeviceTree + gid table for one shape class,
-    memoized on the member segments' content tokens."""
-    key = (group.cls, frozenset(v.token for v in group.views))
+def _stacked_views(group: ClassGroup, epoch: int = 0) -> _StackEntry:
+    """The stacked batch entry for one shape class — (S_pow2, …) stacked
+    DeviceTree, gid table, and (for quantized classes) the stacked
+    narrow leaf buffers — memoized on (class incl. storage dtype,
+    gid-remap epoch, member token set). The epoch is strictly a
+    staleness fence: tokens already change on merges, but keying on the
+    epoch too guarantees batches derived from a pre-remap gid layout
+    can never be served to a post-remap reader."""
+    key = (group.cls, epoch, frozenset(v.token for v in group.views))
     with _STACK_LOCK:
         hit = _STACK_CACHE.get(key)
         if hit is not None:
             _STACK_CACHE.move_to_end(key)
-            return hit.stacked, hit.gids
+            return hit
         # most recent predecessor batch of this class, if any
         base = next(
             (
@@ -257,6 +277,16 @@ def _stacked_views(group: ClassGroup) -> Tuple[sj.DeviceTree, jnp.ndarray]:
         # token-sorted slots so a from-scratch build is deterministic
         views = sorted(group.views, key=lambda v: v.token)
         trees = [v.dtree for v in views] + [dummy_dt] * n_pad
+        leaf_q = qscale = None
+        if group.cls.sdt != "float32":
+            dq_lq, dq_sc = shapes.dummy_quantized(group.cls)
+            leaf_q = jnp.stack(
+                [v.leaf_q for v in views] + [dq_lq] * n_pad
+            )
+            if dq_sc is not None:
+                qscale = jnp.stack(
+                    [v.qscale for v in views] + [dq_sc] * n_pad
+                )
         entry = _StackEntry(
             stacked=sj.DeviceTree(
                 *[
@@ -268,6 +298,8 @@ def _stacked_views(group: ClassGroup) -> Tuple[sj.DeviceTree, jnp.ndarray]:
                 [v.gids_dev for v in views] + [dummy_g] * n_pad
             ),
             slot_tokens=tuple(v.token for v in views),
+            leaf_q=leaf_q,
+            qscale=qscale,
         )
     # registry counters are atomic on their own (stack_stats feeds
     # exact-count test assertions; racing cache-missers each count)
@@ -280,7 +312,7 @@ def _stacked_views(group: ClassGroup) -> Tuple[sj.DeviceTree, jnp.ndarray]:
         while len(_STACK_CACHE) > _STACK_CACHE_MAX:
             _STACK_CACHE.popitem(last=False)
         _G_STACK_CACHE.set(len(_STACK_CACHE))
-    return entry.stacked, entry.gids
+    return entry
 
 
 def _fused_enabled() -> bool:
@@ -290,7 +322,18 @@ def _fused_enabled() -> bool:
     return os.environ.get("REPRO_FUSED_TRAVERSAL", "1") != "0"
 
 
-def _dispatch_stacked(stacked, gids, q, rb, k: int, stack_size: int, cls):
+def _dispatch_stacked(
+    stacked,
+    gids,
+    q,
+    rb,
+    k: int,
+    stack_size: int,
+    cls,
+    leaf_q=None,
+    qscale=None,
+    qerr: float = 0.0,
+):
     _C_TRAVERSAL.inc()
     with _SIG_LOCK:
         _SIGNATURES.add(
@@ -300,13 +343,26 @@ def _dispatch_stacked(stacked, gids, q, rb, k: int, stack_size: int, cls):
     with obs.span("engine.dispatch"):
         # Fused two-phase traversal (collect leaf frontier, evaluate the
         # gathered candidates with the leaf_topk_l2 kernel) is bit-exact
-        # vs the classic path and is the default. The kernel is f32; any
-        # other traversal dtype (search_tree overrides) takes the
-        # classic path. A frontier-cap overflow returns None — fall back
-        # and count it, so benchmarks can see a cap that is too small.
+        # vs the classic path and is the default. The COMPUTE dtype is
+        # f32; any other traversal dtype (search_tree overrides) takes
+        # the classic path. Quantized classes hand their narrow leaf
+        # buffers to the fused path, which streams them and rescores
+        # survivors from the stacked f32 leaves — results stay
+        # bit-identical (certified per dispatch; certificate failure
+        # re-runs that dispatch in f32, counted, never truncated). A
+        # frontier-cap overflow returns None — fall back to the classic
+        # in-loop f32 path and count it.
         if _fused_enabled() and q.dtype == jnp.float32:
             res = sj.constrained_knn_stacked_fused(
-                stacked, gids, q, rb, k, stack_size
+                stacked,
+                gids,
+                q,
+                rb,
+                k,
+                stack_size,
+                leaf_q=leaf_q,
+                qscale=qscale,
+                qerr=qerr,
             )
             if res is not None:
                 _C_FUSED.inc()
@@ -319,14 +375,19 @@ def _dispatch_stacked(stacked, gids, q, rb, k: int, stack_size: int, cls):
 def execute(snapshot, queries, spec: QuerySpec) -> EngineResult:
     """Exact constrained-KNN over a streaming snapshot (segments∪delta)."""
     k = spec.k
-    # the streaming index is f32 end-to-end (segments are sealed as f32,
-    # the delta kernel is f32): reject other dtypes instead of silently
-    # promoting/demoting depending on batch padding. dtype overrides are
-    # for static trees (search_tree), which are devicized per request.
+    # the streaming COMPUTE path is f32 end-to-end (queries, pruning
+    # arithmetic, the delta kernel, rescoring): reject other compute
+    # dtypes instead of silently promoting/demoting depending on batch
+    # padding. dtype overrides are for static trees (search_tree),
+    # which are devicized per request. Segment STORAGE width is
+    # independent: each segment carries its own storage dtype
+    # (bf16/int8 leaf buffers), grouped into storage-aware shape
+    # classes and rescored back to exact f32 results.
     if jnp.dtype(spec.dtype) != jnp.dtype(jnp.float32):
         raise ValueError(
-            "snapshot search is float32-only; QuerySpec.dtype overrides "
-            f"apply to search_tree (got {jnp.dtype(spec.dtype).name})"
+            "snapshot search compute is float32-only; QuerySpec.dtype "
+            "overrides apply to search_tree (segment storage dtype is "
+            f"per-segment, got compute {jnp.dtype(spec.dtype).name})"
         )
     qt = obs.trace.current_query_trace()
     # an active QueryTrace wants the paper metrics even when the caller
@@ -364,9 +425,20 @@ def execute(snapshot, queries, spec: QuerySpec) -> EngineResult:
         groups = plan(snapshot)
     for group in groups:
         with obs.span("engine.stack"):
-            stacked, gids = _stacked_views(group)
+            entry = _stacked_views(group, getattr(snapshot, "epoch", 0))
         res = _dispatch_stacked(
-            stacked, gids, q, rb, k, group.cls.stack_size, group.cls
+            entry.stacked,
+            entry.gids,
+            q,
+            rb,
+            k,
+            group.cls.stack_size,
+            group.cls,
+            leaf_q=entry.leaf_q,
+            qscale=entry.qscale,
+            # one containment certificate covers the whole stacked
+            # dispatch, so it must assume the worst member's bound
+            qerr=max((v.qerr for v in group.views), default=0.0),
         )
         parts.append((res.distances, res.gids))
         if want_stats:

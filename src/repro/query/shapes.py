@@ -35,9 +35,14 @@ class ShapeClass(NamedTuple):
     dim: int
     stack_size: int  # pow2-padded DFS stack bound
     n_gids: int      # pow2-padded gid-table length
+    sdt: str = "float32"  # leaf coordinate STORAGE dtype: segments with
+    #                       different storage widths can never stack
+    #                       (their leaf_q buffers would not concatenate)
 
 
-def shape_class_of(dtree, stack_size: int, n_gids: int) -> ShapeClass:
+def shape_class_of(
+    dtree, stack_size: int, n_gids: int, storage_dtype: str = "float32"
+) -> ShapeClass:
     return ShapeClass(
         n_nodes=int(dtree.center.shape[0]),
         n_leaves=int(dtree.leaf_points.shape[0]),
@@ -45,6 +50,7 @@ def shape_class_of(dtree, stack_size: int, n_gids: int) -> ShapeClass:
         dim=int(dtree.center.shape[1]),
         stack_size=int(stack_size),
         n_gids=int(n_gids),
+        sdt=str(storage_dtype),
     )
 
 
@@ -96,3 +102,20 @@ def dummy_member(cls: ShapeClass, dtype=jnp.float32):
         leaf_index=jnp.full((cls.n_leaves, cls.cap), -1, jnp.int32),
     )
     return dt, jnp.full((cls.n_gids,), -1, jnp.int32)
+
+
+def dummy_quantized(cls: ShapeClass):
+    """The quantized side buffers of a dummy member: an all-zeros
+    (L, cap, d) leaf buffer in the class's storage dtype, plus all-one
+    scales when the dtype carries per-leaf scales (int8). Dead slots
+    (leaf_index -1) are never candidates, so the values are arbitrary —
+    only the shapes/dtypes must stack with real members'."""
+    if cls.sdt == "float32":
+        return None, None
+    leaf_q = jnp.zeros(
+        (cls.n_leaves, cls.cap, cls.dim), jnp.dtype(cls.sdt)
+    )
+    qscale = (
+        jnp.ones((cls.n_leaves,), jnp.float32) if cls.sdt == "int8" else None
+    )
+    return leaf_q, qscale

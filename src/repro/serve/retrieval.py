@@ -34,15 +34,33 @@ from repro.query import QuerySpec
 @dataclasses.dataclass
 class Datastore:
     index: StreamingIndex
-    # amortized-doubling buffer: slot gid holds the token for stored state
-    # gid, so per-step `add` is O(batch) rather than an O(N) reallocation
-    _values: np.ndarray
-    _n: int
+    # values arena: a dense amortized-doubling row buffer plus a
+    # gid -> row indirection. The old layout burned one slot per
+    # EVER-ASSIGNED gid, so a long-running store whose points churn
+    # (add + delete) leaked value slots forever. Rows are recycled
+    # through a freelist the moment a gid is evicted, and the arena is
+    # compacted (rows rewritten dense, indirection rebuilt) when the
+    # index's gid-remap epoch advances past the last one we saw AND the
+    # hole fraction exceeds `_RECLAIM_HOLES` — merges are exactly when
+    # the index itself purges tombstones, so the arena shrinks on the
+    # same cadence as the key storage.
+    _values: np.ndarray                  # (rows,) i32 dense row buffer
+    _row_of: dict                        # live gid -> row
+    _free: list                          # recycled rows
+    _next_row: int = 0                   # high-water row cursor
+    _seen_epoch: int = 0
+
+    _RECLAIM_HOLES = 0.5
 
     @property
     def values(self) -> np.ndarray:
-        """(next_gid,) int32 next-token per ever-stored state."""
-        return self._values[: self._n]
+        """(next_gid,) int32 materialized gid-indexed view (0 where the
+        gid is dead) — introspection/compat only; storage is the dense
+        row arena behind the gid indirection."""
+        out = np.zeros(int(self.index.log.next_gid), np.int32)
+        for g, row in self._row_of.items():
+            out[g] = self._values[row]
+        return out
 
     @staticmethod
     def from_pairs(
@@ -71,12 +89,68 @@ class Datastore:
                 backend=backend,
             )
         )
-        index.bulk_load(keys)
-        return Datastore(index=index, _values=vals, _n=len(vals))
+        gids = index.bulk_load(keys)
+        store = Datastore(index=index, _values=np.zeros(0, np.int32),
+                          _row_of={}, _free=[])
+        store._seen_epoch = index.log.epoch
+        store._bind(gids, vals)
+        return store
 
     @property
     def n_keys(self) -> int:
         return self.index.n_live
+
+    @property
+    def arena_rows(self) -> int:
+        """Current dense values-arena length (introspection/tests)."""
+        return len(self._values)
+
+    def _bind(self, gids: np.ndarray, vals: np.ndarray) -> None:
+        """Assign each gid a row (freelist first, then the high-water
+        cursor, doubling the dense buffer as needed) and store its
+        value there."""
+        rows = np.empty(len(gids), np.int64)
+        take = min(len(self._free), len(gids))
+        for i in range(take):
+            rows[i] = self._free.pop()
+        fresh = len(gids) - take
+        if fresh:
+            need = self._next_row + fresh
+            if need > len(self._values):
+                buf = np.zeros(max(need, 2 * len(self._values), 16), np.int32)
+                buf[: self._next_row] = self._values[: self._next_row]
+                self._values = buf
+            rows[take:] = np.arange(self._next_row, need)
+            self._next_row = need
+        self._values[rows] = vals
+        self._row_of.update(zip(map(int, gids), map(int, rows)))
+
+    def _maybe_reclaim(self) -> None:
+        """Compact the values arena after the index remapped gids
+        (merges purge tombstones — the moment value holes are stale
+        garbage, not transient churn) once holes dominate."""
+        epoch = self.index.log.epoch
+        if epoch <= self._seen_epoch:
+            return
+        self._seen_epoch = epoch
+        used = self._next_row
+        holes = used - len(self._row_of)
+        if used == 0 or holes <= self._RECLAIM_HOLES * used:
+            return
+        gids = np.fromiter(self._row_of.keys(), np.int64, len(self._row_of))
+        old_rows = np.fromiter(
+            self._row_of.values(), np.int64, len(self._row_of)
+        )
+        dense = self._values[old_rows]
+        buf = np.zeros(max(len(dense), 16), np.int32)
+        buf[: len(dense)] = dense
+        self._values = buf
+        self._row_of = dict(zip(map(int, gids), range(len(gids))))
+        self._free = []
+        self._next_row = len(gids)
+        if obs.REGISTRY.enabled:
+            obs.REGISTRY.counter("serve.values_reclaims").inc()
+            obs.REGISTRY.counter("serve.values_rows_freed").inc(int(holes))
 
     def add(self, keys: np.ndarray, values: np.ndarray) -> np.ndarray:
         """Append (state, token) pairs to the live memory; returns the
@@ -88,20 +162,21 @@ class Datastore:
                 f"add: {len(keys)} keys but {len(vals)} values"
             )
         gids = self.index.add(keys)
-        # write by gid slot, not by cursor: stays correct even if a prior
-        # aborted index.add burned gids (slot gid always holds gid's token)
-        need = int(self.index.log.next_gid)
-        if need > len(self._values):
-            buf = np.zeros(max(need, 2 * len(self._values), 16), np.int32)
-            buf[: self._n] = self._values[: self._n]
-            self._values = buf
-        self._values[gids] = vals
-        self._n = need
+        self._bind(gids, vals)
+        self._maybe_reclaim()
         return gids
 
     def delete(self, gids: np.ndarray) -> int:
-        """Evict stored states by id (tombstoned now, purged at merge)."""
-        return self.index.delete(gids)
+        """Evict stored states by id (tombstoned now, purged at merge).
+        The values rows of evicted gids return to the freelist at once."""
+        gids = np.atleast_1d(np.asarray(gids, np.int64))
+        n = self.index.delete(gids)
+        for g in gids:
+            row = self._row_of.pop(int(g), None)
+            if row is not None:
+                self._free.append(row)
+        self._maybe_reclaim()
+        return n
 
     def search(self, queries: np.ndarray, spec: QuerySpec):
         """Constrained NN over the live key set — a thin adapter over
@@ -122,13 +197,19 @@ class Datastore:
             res = self.search(queries, QuerySpec(k=k, radius=r))
         idx = np.asarray(res.gids, np.int64)
         dist = np.asarray(res.distances, np.float32)
-        # a gid at/past _n is a point whose token is not published yet (a
-        # concurrent add between index publish and the values write):
-        # treat it as a transient miss, never as another state's token
-        valid = (idx >= 0) & (idx < self._n)
-        if self._n == 0:  # empty store (e.g. bootstrap before first add)
+        # a gid without a bound row is a point whose token is not
+        # published yet (a concurrent add between index publish and the
+        # values bind): treat it as a transient miss, never as another
+        # state's token
+        row_of = self._row_of
+        flat = idx.reshape(-1)
+        rows = np.fromiter(
+            (row_of.get(int(g), -1) for g in flat), np.int64, len(flat)
+        ).reshape(idx.shape)
+        valid = rows >= 0
+        if len(self._values) == 0:  # bootstrap before first add
             return np.zeros(idx.shape, np.int32), dist, valid
-        vals = self._values[np.clip(idx, 0, self._n - 1)]
+        vals = self._values[np.clip(rows, 0, len(self._values) - 1)]
         vals = np.where(valid, vals, 0)
         return vals, dist, valid
 

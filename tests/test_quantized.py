@@ -1,0 +1,330 @@
+"""Quantized segment storage: pruning soundness, bit-identical rescore,
+fallback accounting, and the gid-epoch values-arena compaction oracle.
+
+The contract under test: storing sealed-segment coordinates at bf16 or
+int8 changes WHICH bytes the leaf kernel streams, never WHAT the query
+answers — outward-rounded radii plus the over-fetch + exact-f32-rescore
+pass keep every result bit-identical to the all-f32 path, and when the
+containment certificate cannot vouch for a dispatch it re-runs in f32
+(counted), never truncating.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import TreeSpec, brute
+from repro.core import search_jax as sj
+from repro.index import StreamingConfig, StreamingIndex
+from repro.kernels import quantize
+from repro.query import shapes
+from repro.serve.retrieval import Datastore
+
+SPEC = TreeSpec.ballstar(leaf_size=8)
+
+STORAGE_DTYPES = ("bfloat16", "int8")
+
+
+def make_index(dim, storage_dtype, cap=64, factor=3):
+    return StreamingIndex(
+        StreamingConfig(
+            dim=dim,
+            delta_capacity=cap,
+            spec=SPEC,
+            merge_factor=factor,
+            storage_dtype=storage_dtype,
+        )
+    )
+
+
+def tie_heavy(rng, n, d):
+    """Coordinates snapped to a coarse grid: many exact distance ties,
+    and values that round IDENTICALLY under bf16/int8 quantization —
+    the adversarial regime for quantized selection order."""
+    return (np.round(rng.normal(size=(n, d)) * 4.0) / 4.0).astype(np.float32)
+
+
+def check_exact(idx, queries, k, r):
+    """Index results == exact brute force over its own live point set —
+    subsumes pruning soundness: a true neighbor pruned by the quantized
+    scan or an outward-rounded radius would shrink the result count or
+    shift the distance multiset. Tie-heavy data makes gid sets
+    ambiguous (brute and the index may break EXACT distance ties
+    differently), so gids are verified by re-deriving each one's true
+    distance rather than by set equality."""
+    pts, gids = idx.live_points()
+    row_of = {int(g): j for j, g in enumerate(gids)}
+    res = idx.constrained_knn(queries, k, r)
+    for i, q in enumerate(queries):
+        bi, bd = brute.constrained_knn(pts, q, k, r)
+        valid = res.gids[i] >= 0
+        assert valid.sum() == len(bi)
+        np.testing.assert_allclose(
+            res.distances[i][valid], bd, rtol=1e-4, atol=1e-5
+        )
+        # every reported gid is a real live point attaining exactly its
+        # reported distance (so with the multiset equality above, the
+        # result is a true k-nearest set up to exact-distance ties)
+        for g, dist in zip(res.gids[i][valid], res.distances[i][valid]):
+            true = np.sqrt(((pts[row_of[int(g)]] - q) ** 2).sum())
+            np.testing.assert_allclose(dist, true, rtol=1e-5, atol=1e-6)
+
+
+# -- pruning soundness (property test) ---------------------------------------
+
+
+@pytest.mark.parametrize("sdt", STORAGE_DTYPES)
+@pytest.mark.parametrize("radius", [np.inf, 1.25])
+def test_quantized_never_prunes_true_neighbor(sdt, radius):
+    """Tie-heavy coords, tombstoned slots, finite and infinite radius:
+    the quantized default read path answers exactly what brute force
+    answers over the live set."""
+    rng = np.random.default_rng(11)
+    idx = make_index(5, sdt, cap=32)
+    pts = tie_heavy(rng, 300, 5)
+    gids = idx.add(pts)  # several seals + merges
+    idx.delete(gids[40:90])  # tombstoned slots stay in the leaf buffers
+    q = tie_heavy(rng, 12, 5)
+    check_exact(idx, q, k=6, r=radius)
+
+
+@pytest.mark.parametrize("sdt", STORAGE_DTYPES)
+def test_quantized_n_smaller_than_k(sdt):
+    """N < k: the over-fetch window covers the whole candidate set, so
+    rows must fill with (+inf, -1) exactly like the f32 path."""
+    rng = np.random.default_rng(3)
+    idx = make_index(4, sdt, cap=8)
+    idx.add(tie_heavy(rng, 6, 4))  # never seals? cap=8: stays in delta
+    idx.flush()  # force a (quantized) segment holding all 6 points
+    q = tie_heavy(rng, 4, 4)
+    check_exact(idx, q, k=10, r=np.inf)
+
+
+@pytest.mark.parametrize("sdt", STORAGE_DTYPES)
+def test_quantized_bit_identical_to_f32(sdt):
+    """The headline guarantee: same inserts/deletes/queries through
+    f32 storage and quantized storage produce BIT-equal distances and
+    gids (not merely close)."""
+
+    def run(storage):
+        rng = np.random.default_rng(7)
+        idx = make_index(6, storage, cap=64)
+        g = idx.add(rng.normal(size=(400, 6)).astype(np.float32))
+        idx.delete(g[100:160])
+        idx.add(rng.normal(size=(80, 6)).astype(np.float32))
+        q = rng.normal(size=(10, 6)).astype(np.float32)
+        res = idx.constrained_knn(q, k=5, r=1.5)
+        res2 = idx.knn(q, k=3)
+        return res, res2
+
+    base, base2 = run("float32")
+    quant, quant2 = run(sdt)
+    np.testing.assert_array_equal(
+        np.asarray(quant.distances), np.asarray(base.distances)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(quant.gids), np.asarray(base.gids)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(quant2.distances), np.asarray(base2.distances)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(quant2.gids), np.asarray(base2.gids)
+    )
+
+
+def test_outward_radius_rounding_bounds():
+    """The widened radius is an upper bound on every member distance
+    through f32 arithmetic AND survives the quantized round trip: for
+    every node, max ||p~ - c|| (dequantized p~) <= r_widened + qerr."""
+    rng = np.random.default_rng(5)
+    pts = tie_heavy(rng, 200, 6)
+    from repro.core import build
+
+    tree = build(pts, SPEC)
+    lp = np.asarray(tree.leaf_points, np.float32)
+    li = np.asarray(tree.leaf_index)
+    for sdt in STORAGE_DTYPES:
+        leaf_q, scale, qerr = quantize.quantize_leaves(lp, sdt)
+        deq = np.asarray(quantize.dequantize(leaf_q, scale), np.float64)
+        for node in range(len(np.asarray(tree.center))):
+            rank = int(np.asarray(tree.leaf_of_node)[node])
+            if rank < 0:
+                continue
+            c = np.asarray(tree.center, np.float64)[node]
+            r_node = float(np.asarray(tree.radius)[node])
+            live = li[rank] >= 0
+            if not live.any():
+                continue
+            d = np.sqrt(((deq[rank][live] - c) ** 2).sum(-1)).max()
+            assert d <= r_node + qerr + 1e-7, (sdt, node, d, r_node, qerr)
+
+
+# -- rescore fallback accounting ---------------------------------------------
+
+
+def test_rescore_fallback_counts_and_never_truncates(monkeypatch):
+    """When the containment certificate refuses to vouch, the dispatch
+    re-runs in f32: the fallback counter increments and results stay
+    bit-identical — the slack path degrades to extra work, never to
+    wrong or missing neighbors."""
+    rng = np.random.default_rng(13)
+    pts = rng.normal(size=(300, 6)).astype(np.float32)
+    q = rng.normal(size=(8, 6)).astype(np.float32)
+
+    def run():
+        idx = make_index(6, "bfloat16", cap=64)
+        idx.add(pts)
+        return idx.constrained_knn(q, k=4, r=np.inf)
+
+    obs.REGISTRY.reset()
+    base = run()
+    exact_before = obs.REGISTRY.counter("quantized.rescore", result="exact")
+    assert exact_before.value > 0  # quantized path actually ran
+
+    # force every certificate to fail
+    monkeypatch.setattr(
+        sj, "_quant_contained", lambda *a, **kw: False
+    )
+    obs.REGISTRY.reset()
+    fb = run()
+    fallback = obs.REGISTRY.counter("quantized.rescore", result="fallback")
+    assert fallback.value > 0
+    np.testing.assert_array_equal(
+        np.asarray(fb.distances), np.asarray(base.distances)
+    )
+    np.testing.assert_array_equal(np.asarray(fb.gids), np.asarray(base.gids))
+
+
+# -- storage-dtype shape classes ---------------------------------------------
+
+
+def test_storage_dtype_splits_shape_class():
+    """Segments of different storage widths can never stack: the dtype
+    is part of the shape class."""
+    rng = np.random.default_rng(1)
+    idx_a = make_index(4, "bfloat16", cap=16)
+    idx_b = make_index(4, "int8", cap=16)
+    idx_a.add(rng.normal(size=(16, 4)).astype(np.float32))
+    idx_b.add(rng.normal(size=(16, 4)).astype(np.float32))
+    va = idx_a.snapshot().segments[0]
+    vb = idx_b.snapshot().segments[0]
+    ca = shapes.shape_class_of(
+        va.dtree, va.stack_size, int(va.gids_dev.shape[0]), va.storage_dtype
+    )
+    cb = shapes.shape_class_of(
+        vb.dtree, vb.stack_size, int(vb.gids_dev.shape[0]), vb.storage_dtype
+    )
+    assert ca != cb and ca.sdt == "bfloat16" and cb.sdt == "int8"
+    # dummy members of a quantized class stack with real members
+    lq, sc = shapes.dummy_quantized(cb)
+    assert lq.shape == np.asarray(vb.leaf_q).shape
+    assert lq.dtype == vb.leaf_q.dtype
+    assert sc is not None and sc.shape == np.asarray(vb.qscale).shape
+
+
+# -- gid-epoch values-arena compaction oracle --------------------------------
+
+
+def test_epoch_bumps_on_merge_and_compact():
+    rng = np.random.default_rng(2)
+    idx = make_index(3, "bfloat16", cap=16, factor=2)
+    e0 = idx.snapshot().epoch
+    idx.add(rng.normal(size=(64, 3)).astype(np.float32))  # seals + merges
+    e1 = idx.snapshot().epoch
+    assert e1 > e0
+    idx.compact()
+    assert idx.snapshot().epoch > e1
+
+
+def test_datastore_compaction_preserves_bindings():
+    """Randomized insert/delete interleave (seals and tiered merges
+    fire underneath): every live gid -> value binding survives, evicted
+    gids' rows are recycled, and the arena reclaims after remap epochs
+    leave it mostly holes."""
+    rng = np.random.default_rng(17)
+    keys0 = rng.normal(size=(200, 6)).astype(np.float32)
+    vals0 = rng.integers(0, 99, 200).astype(np.int32)
+    st = Datastore.from_pairs(keys0, vals0, leaf_size=8, delta_capacity=32)
+    ref = dict(zip(range(200), map(int, vals0)))
+
+    for _ in range(40):
+        if rng.random() < 0.55:
+            m = int(rng.integers(1, 50))
+            ks = rng.normal(size=(m, 6)).astype(np.float32)
+            vs = rng.integers(0, 99, m).astype(np.int32)
+            gs = st.add(ks, vs)
+            ref.update(zip(map(int, gs), map(int, vs)))
+        else:
+            live = np.fromiter(ref.keys(), np.int64, len(ref))
+            if not len(live):
+                continue
+            pick = rng.choice(
+                live, size=min(len(live), int(rng.integers(1, 40))),
+                replace=False,
+            )
+            st.delete(pick)
+            for g in pick:
+                ref.pop(int(g), None)
+        # invariant: the indirection is exactly the live set, and every
+        # binding reads back the inserted value
+        assert st._row_of.keys() == set(ref.keys())
+        for g, v in ref.items():
+            assert int(st._values[st._row_of[g]]) == v
+
+    # force a reclaim: delete most of the store, then trigger a remap
+    live = np.fromiter(ref.keys(), np.int64, len(ref))
+    rows_before = st.arena_rows  # high-water while ~everything is live
+    st.delete(live[: int(len(live) * 0.8)])
+    for g in live[: int(len(live) * 0.8)]:
+        ref.pop(int(g), None)
+    st.index.compact()  # bumps the gid-remap epoch
+    st.add(
+        rng.normal(size=(1, 6)).astype(np.float32),
+        rng.integers(0, 99, 1).astype(np.int32),
+    )  # _maybe_reclaim runs on the next mutation
+    assert st._next_row < rows_before  # arena shrank past the holes
+    assert st._next_row == len(st._row_of)  # dense after compaction
+    for g, v in list(ref.items()):
+        assert int(st._values[st._row_of[g]]) == v
+
+    # lookups still resolve to the right tokens
+    q = rng.normal(size=(3, 6)).astype(np.float32)
+    v_out, _, valid = st.lookup(q, k=2, r=np.inf)
+    pts, gids = st.index.live_points()
+    for i in range(3):
+        if valid[i, 0]:
+            j = int(np.argmin(np.sqrt(((pts - q[i]) ** 2).sum(1))))
+            assert v_out[i, 0] == ref[int(gids[j])]
+
+
+# -- delta double buffer -----------------------------------------------------
+
+
+def test_delta_double_buffer_consistency():
+    """Front and back pairs stay content-identical through appends and
+    tombstones, and a snapshot taken before an append keeps its
+    pre-append front."""
+    from repro.index.delta import DeltaBuffer
+
+    rng = np.random.default_rng(4)
+    buf = DeltaBuffer.empty(16, 3)
+    a = rng.normal(size=(5, 3)).astype(np.float32)
+    buf = buf.append(a, np.arange(5))
+    old = buf
+    b = rng.normal(size=(4, 3)).astype(np.float32)
+    buf = buf.append(b, np.arange(5, 9))
+    buf = buf.tombstone(np.array([1, 3]))
+    np.testing.assert_array_equal(
+        np.asarray(buf.points), np.asarray(buf.back_points)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(buf.gids), np.asarray(buf.back_gids)
+    )
+    # snapshot isolation: the pre-append front is untouched
+    np.testing.assert_array_equal(np.asarray(old.points)[:5], a)
+    assert np.asarray(old.gids)[5] == -1
+    assert buf.n_live == 7
+    p, g = buf.live()
+    assert len(p) == 7 and set(g) == {0, 2, 4, 5, 6, 7, 8}
