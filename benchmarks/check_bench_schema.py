@@ -5,6 +5,11 @@ Checks every ``BENCH_<section>.json`` in the output directory
 
   * section files: ``section`` matches the filename and every record
     carries ``name`` / numeric ``value`` / ``unit``;
+  * ``BENCH_serve.json`` additionally must carry the serving SLO set —
+    p50/p95/p99 latency (ms), qps, request/dispatch counts, mean batch
+    occupancy — and its per-pow2-class dispatch records must sum to the
+    total dispatch record (the "dispatches bounded by the batch-class
+    set" acceptance property, re-checked offline from the artifact);
   * ``BENCH_obs.json``: the three registry sections are present,
     counters are non-negative integers, gauges are numbers, and every
     histogram has a ``unit`` plus consistent ``count`` / sparse
@@ -54,6 +59,61 @@ def check_section(path: str, payload: dict) -> List[str]:
                 errs.append(
                     f"{path}: records[{i}] bad {field}: {rec.get(field)!r}"
                 )
+    return errs
+
+
+def check_serve(path: str, payload: dict) -> List[str]:
+    """Serving-smoke artifact: the SLO records must exist with the right
+    units, and the per-class dispatch breakdown must account for every
+    dispatch (no batch escaped the pow2 class set)."""
+    errs = []
+    recs = {
+        r.get("name"): r
+        for r in payload.get("records", [])
+        if isinstance(r, dict)
+    }
+    required = {
+        "serve/latency_p50_ms": "ms",
+        "serve/latency_p95_ms": "ms",
+        "serve/latency_p99_ms": "ms",
+        "serve/qps": "qps",
+        "serve/requests": "count",
+        "serve/dispatches": "count",
+        "serve/batch_occupancy_mean": "requests",
+    }
+    for name, unit in required.items():
+        rec = recs.get(name)
+        if rec is None:
+            errs.append(f"{path}: missing record {name!r}")
+            continue
+        if rec.get("unit") != unit:
+            errs.append(
+                f"{path}: {name} unit={rec.get('unit')!r} != {unit!r}"
+            )
+        if not _num(rec.get("value")) or rec["value"] < 0:
+            errs.append(f"{path}: {name} value={rec.get('value')!r} bad")
+    per_class = [
+        r for n, r in recs.items()
+        if isinstance(n, str) and n.startswith("serve/dispatches_class_")
+    ]
+    if not per_class:
+        errs.append(f"{path}: no per-class dispatch records")
+    elif "serve/dispatches" in recs and _num(
+        recs["serve/dispatches"].get("value")
+    ):
+        total = sum(
+            r.get("value", 0) for r in per_class if _num(r.get("value"))
+        )
+        if total != recs["serve/dispatches"]["value"]:
+            errs.append(
+                f"{path}: per-class dispatches sum {total} != total "
+                f"{recs['serve/dispatches']['value']} — a batch escaped "
+                f"the pow2 class set"
+            )
+        for r in per_class:
+            b = r["name"].rsplit("_", 1)[-1]
+            if not (b.isdigit() and int(b) & (int(b) - 1) == 0):
+                errs.append(f"{path}: {r['name']} class {b} not a pow2")
     return errs
 
 
@@ -214,6 +274,8 @@ def main(argv: List[str]) -> int:
             errs.extend(check_obs(path, payload))
         else:
             errs.extend(check_section(path, payload))
+            if os.path.basename(path) == "BENCH_serve.json":
+                errs.extend(check_serve(path, payload))
     if "BENCH_obs.json" not in {os.path.basename(p) for p in paths}:
         errs.append(f"{out_dir}: BENCH_obs.json missing")
     for e in errs:

@@ -20,7 +20,7 @@ def main() -> None:
         "--only",
         default=None,
         help="comma list: depth,nodes_visited,constrained_nn,search_time,"
-        "scalability,kernels,roofline,streaming",
+        "scalability,kernels,roofline,streaming,serve",
     )
     args = ap.parse_args()
 
@@ -32,6 +32,7 @@ def main() -> None:
         roofline_report,
         scalability,
         search_time,
+        serve_bench,
         streaming,
     )
 
@@ -44,6 +45,7 @@ def main() -> None:
         "kernels": kernels_bench.run,            # kernel rooflines
         "roofline": roofline_report.run,         # dry-run roofline table
         "streaming": streaming.run,              # LSM mixed read/write
+        "serve": serve_bench.run,                # frontend smoke (SLOs)
     }
     from . import common
 

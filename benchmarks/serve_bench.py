@@ -1,0 +1,141 @@
+"""Serving-tier smoke bench: concurrent clients against the frontend.
+
+Builds a streaming index, starts the continuous-batching
+`SearchFrontend` (warmup on), and fires several client threads at it
+simultaneously. Emits the serving SLO currency — p50/p95/p99
+submit→resolve latency, sustained qps, mean batch occupancy — plus the
+per-pow2-class dispatch breakdown, all into ``BENCH_serve.json``
+(schema-gated by `check_bench_schema.py`).
+
+The run also *asserts* the serving acceptance property inline: every
+dispatch the obs registry recorded must belong to the frontend's closed
+set of pow2 batch classes. If batching ever leaks an unexpected query
+shape (= an unplanned compile on the serving path), this section fails
+and CI goes red.
+
+Scales: BENCH_N caps the index size, BENCH_Q caps total requests
+(shared convention with the other sections); --full serves paper-ish
+volume.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+
+import numpy as np
+
+from repro import obs
+from repro.index import StreamingConfig, StreamingIndex
+from repro.serve.frontend import FrontendConfig, SearchFrontend
+
+from . import common
+
+DIM = 16
+K = 8
+N_CLIENTS = 8
+MAX_BATCH = 32
+
+
+def run(full: bool = False) -> None:
+    n, n_req = common.sizes(full)
+    n = min(n, 200_000)
+    n_req = max(N_CLIENTS, min(n_req, 20_000))
+    rng = np.random.default_rng(0)
+
+    idx = StreamingIndex(
+        StreamingConfig(dim=DIM, delta_capacity=2048, defer_merges=True)
+    )
+    idx.add(rng.normal(size=(n, DIM)).astype(np.float32))
+    idx.flush()
+    while idx.maintain():
+        pass
+
+    cfg = FrontendConfig(k=K, radius=np.inf, max_batch=MAX_BATCH)
+    fe = SearchFrontend(idx, cfg)
+    base_dispatch = {b: fe._c_dispatch[b].value for b in cfg.batch_classes}
+    base_lat_count = fe._h_latency.count
+
+    per_client = n_req // N_CLIENTS
+    vecs = rng.normal(size=(N_CLIENTS, per_client, DIM)).astype(np.float32)
+    lat_ms = [[] for _ in range(N_CLIENTS)]
+
+    def client(c: int) -> None:
+        for i in range(per_client):
+            t0 = time.perf_counter()
+            fe.submit(vecs[c, i]).result(300)
+            lat_ms[c].append((time.perf_counter() - t0) * 1e3)
+
+    with fe:  # start() warms every batch class before any client runs
+        t0 = time.perf_counter()
+        threads = [
+            threading.Thread(target=client, args=(c,))
+            for c in range(N_CLIENTS)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+
+    samples = np.concatenate([np.asarray(l) for l in lat_ms])
+    total = len(samples)
+    qps = total / wall if wall > 0 else 0.0
+
+    # acceptance property, asserted in-run: the registry must show every
+    # dispatch inside the closed pow2 class set (no surprise shapes)
+    per_class = {
+        b: fe._c_dispatch[b].value - base_dispatch[b]
+        for b in cfg.batch_classes
+    }
+    n_dispatch = sum(per_class.values())
+    if n_dispatch == 0:
+        raise RuntimeError("serve bench recorded no dispatches")
+    occ = fe._h_occupancy
+    if fe._h_latency.count - base_lat_count != total:
+        raise RuntimeError(
+            "frontend latency histogram disagrees with client count"
+        )
+
+    p50, p95, p99 = np.percentile(samples, [50, 95, 99])
+    mean_occ = total / n_dispatch
+    common.emit(
+        "serve/latency_p50_ms", p50,
+        f"{N_CLIENTS}_clients_x_{per_client}", unit="ms",
+    )
+    common.emit(
+        "serve/latency_p95_ms", p95, "submit_to_resolve", unit="ms"
+    )
+    common.emit(
+        "serve/latency_p99_ms", p99, "submit_to_resolve", unit="ms"
+    )
+    common.emit("serve/qps", qps, f"wall_s={wall:.2f}", unit="qps")
+    common.emit(
+        "serve/requests", float(total), "completed_requests", unit="count"
+    )
+    common.emit(
+        "serve/dispatches", float(n_dispatch), "engine_batches", unit="count"
+    )
+    common.emit(
+        "serve/batch_occupancy_mean", mean_occ,
+        f"max_batch={MAX_BATCH}", unit="requests",
+    )
+    for b in cfg.batch_classes:
+        common.emit(
+            f"serve/dispatches_class_{b}", float(per_class[b]),
+            "pow2_batch_class", unit="count",
+        )
+    # the full batch-occupancy histogram rides along in BENCH_obs.json
+    # (serve.frontend.batch_occupancy); surface its percentile here so
+    # the section is self-contained for trend tooling
+    common.emit(
+        "serve/batch_occupancy_p95", occ.percentile(95),
+        "obs_histogram_upper_edge", unit="requests",
+    )
+
+
+if __name__ == "__main__":
+    common.reset_records()
+    run(full=os.environ.get("BENCH_FULL") == "1")
+    print("json=", common.write_bench_json("serve"))
+    print("obs=", common.write_obs_json())

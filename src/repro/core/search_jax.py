@@ -602,8 +602,13 @@ def _quant_contained(sq_q, gq, rescored_sq, qerr: float, dim: int, k: int):
     n_live = (gq >= 0).sum(axis=1)
     window_open = n_live < kprime
     # margin for f32 evaluation error of the squared-distance sums on
-    # BOTH sides of the comparison (generous: ~dim * 2^-22 relative)
-    m = 1.0 + max(dim, 1) * 2.0**-22
+    # BOTH sides of the comparison. Since the int8 dequant product is
+    # exact (pow2 scales), the kernel keys are bitwise-deterministic
+    # and the only slop left is the sub/square/accumulate roundings of
+    # a length-`dim` sum — <= ~(dim+2)*2^-24 relative; dim * 2^-23
+    # keeps a 2x cushion (was 2^-22 when fma contraction of the
+    # dequant multiply made the keys themselves 1-ulp ambiguous)
+    m = 1.0 + max(dim, 1) * 2.0**-23
     t = np.sqrt(np.maximum(sq_q[:, kprime - 1], 0.0))
     s_k = np.sqrt(np.maximum(rs[:, k - 1], 0.0)) if k <= kprime else np.inf
     gap_ok = s_k * m + qerr < t / m

@@ -37,6 +37,12 @@ O(f · log_f (N/C)) segments (plus the delta) are searched per query.
 from .delta import DeltaBuffer  # noqa: F401
 from .search import StreamResult, constrained_knn, knn  # noqa: F401
 from .segment import Segment, merge_segments, plan_merges, tier_of  # noqa: F401
+from .sharded import (  # noqa: F401
+    ShardedSnapshot,
+    ShardedStreamingIndex,
+    data_mesh,
+)
 from .snapshot import SegmentView, Snapshot  # noqa: F401
 from .streaming import StreamingConfig, StreamingIndex  # noqa: F401
 from .tombstones import TombstoneLog  # noqa: F401
+from .wal import WriteAheadLog  # noqa: F401

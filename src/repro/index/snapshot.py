@@ -54,6 +54,10 @@ class Snapshot:
     #                          bumps when merges move gids between
     #                          segments, so gid-keyed caches built
     #                          against an older epoch must be dropped
+    # opaque per-index tag mixed into the query engine's stacked-batch
+    # cache key: serving shards that share a shape class get their own
+    # cache buckets instead of evicting each other's batches
+    cache_tag: object = None
 
     @property
     def n_parts(self) -> int:

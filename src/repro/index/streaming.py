@@ -23,13 +23,27 @@ delta arena, new segment table — on locals and publishes it with ONE
 reference assignment (`self._state = ...`, atomic in CPython). A reader
 calling `snapshot()` dereferences `self._state` once, so it sees either
 the state before a mutation or after it, never a half-applied seal,
-merge, or compaction.
+merge, or compaction. Mutators additionally serialize against each
+other on a writer lock, so a background compaction thread
+(`start_background_compaction`) can run size-tiered merges OFF the
+write path: with `defer_merges` set, `add`/`delete` skip inline
+merging entirely and `maintain()` — called by the thread — performs it
+under MVCC (readers keep their snapshots, the commit is one swap).
+
+Durability: with `wal_path` set, every mutator appends its logical
+operation to a write-ahead log (`index/wal.py`) BEFORE applying it, and
+constructing an index over an existing log REPLAYS it through the same
+mutators — same gids, same live set, same results; `_recover_log`'s
+epoch semantics extend across restarts because each record carries the
+epoch observed at append time and recovery fences the rebuilt log's
+epoch to at least the last durable value.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import os
+import threading
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -39,6 +53,7 @@ from repro.core.types import TreeSpec
 from repro.kernels import quantize
 
 from . import search as search_mod
+from . import wal as wal_mod
 from .delta import DeltaBuffer
 from .segment import Segment, merge_segments, plan_merges, tier_of
 from .snapshot import SegmentView, Snapshot
@@ -59,6 +74,16 @@ class StreamingConfig:
     # kernels/quantize.py); "int8" quarters them; "float32" opts out.
     # REPRO_STORAGE_DTYPE overrides for A/B runs without code changes.
     storage_dtype: Optional[str] = None
+    # write-ahead log file: mutations are appended before being applied
+    # and replayed on construction over an existing file (crash
+    # recovery). None = volatile index (the default). wal_sync adds an
+    # fsync per record for true crash-consistency (slower).
+    wal_path: Optional[str] = None
+    wal_sync: bool = False
+    # skip inline size-tiered/purge merging in add/delete/flush; the
+    # merges then run only via maintain() — typically from the
+    # background compaction thread — keeping them off the write path
+    defer_merges: bool = False
 
     def __post_init__(self) -> None:
         if self.spec is None:
@@ -98,6 +123,17 @@ class StreamingIndex:
             delta=DeltaBuffer.empty(config.delta_capacity, config.dim),
             segments={},
         )
+        # serializes mutators against each other (and against the
+        # background compaction thread); readers never take it
+        self._write_lock = threading.RLock()
+        self._bg_thread: Optional[threading.Thread] = None
+        self._bg_stop = threading.Event()
+        # opaque tag mixed into the query engine's stacked-batch cache
+        # key via Snapshot.cache_tag: distinct indexes sharing a shape
+        # class (serving shards) get distinct cache buckets instead of
+        # evicting each other's batches
+        self.cache_tag: Optional[object] = None
+        self._wal: Optional[wal_mod.WriteAheadLog] = None
         # registry handles, labeled per instance so concurrent indexes
         # (tests, serving shards) don't fold into one series
         lbl = {"index": f"idx{next(_INSTANCE_IDS)}"}
@@ -119,11 +155,41 @@ class StreamingIndex:
         self._g_delta_fill = reg.gauge("index.delta_fill", **lbl)
         self._g_delta_occupancy = reg.gauge("index.delta_occupancy", **lbl)
         self._g_garbage = reg.gauge("index.tombstone_garbage_ratio", **lbl)
+        self._c_wal_records = reg.counter("index.wal_records", **lbl)
+        self._c_wal_replayed = reg.counter("index.wal_replayed", **lbl)
+        self._c_maintenance = reg.counter("index.maintenance_runs", **lbl)
+
+        if config.wal_path:
+            # recovery IS construction: replay the intact prefix of an
+            # existing log through the very mutators that wrote it
+            # (self._wal is still None here, so nothing is re-logged),
+            # then fence the epoch and resume appending
+            records = list(wal_mod.replay(config.wal_path))
+            max_epoch = 0
+            for op, fields in records:
+                max_epoch = max(max_epoch, int(fields.pop("_epoch", 0)))
+                self._apply_wal_record(op, fields)
+            if records:
+                self._c_wal_replayed.inc(len(records))
+                # epoch stamps are taken BEFORE each op, so replaying
+                # the ops re-derives at least the stamped values; the
+                # fence additionally covers epoch bumps that were
+                # observed (and recorded) but whose cause was an
+                # aborted mutation the replay cannot reproduce
+                if self.log.epoch < max_epoch:
+                    self.log._epoch = max_epoch
+            self._wal = wal_mod.WriteAheadLog(
+                config.wal_path, sync=config.wal_sync
+            )
 
     # -- introspection -------------------------------------------------------
     @property
     def version(self) -> int:
         return self._state.version
+
+    @property
+    def dim(self) -> int:
+        return self.config.dim
 
     @property
     def n_live(self) -> int:
@@ -180,6 +246,8 @@ class StreamingIndex:
             "segments_merged": self._c_segments_merged.value,
             "compactions": self._c_compactions.value,
             "bulk_loads": self._c_bulk_loads.value,
+            "wal_records": self._c_wal_records.value,
+            "maintenance_runs": self._c_maintenance.value,
             "tombstone_garbage_ratio": (
                 n_dead / n_total if n_total else 0.0
             ),
@@ -190,114 +258,220 @@ class StreamingIndex:
     # on locals; if anything raises before _commit (e.g. a failed tree
     # build during a seal or merge), _recover_log rederives the log from
     # the still-published state so the two can never stay out of sync.
+    # Mutators hold the writer lock end to end and append their logical
+    # op to the WAL (if configured) before touching anything.
 
-    def add(self, points: np.ndarray) -> np.ndarray:
-        """Insert points; returns their assigned global ids."""
+    def _wal_append(self, op: str, **fields) -> None:
+        if self._wal is not None:
+            # stamp the epoch observed at append time: the recovery
+            # fence (see __init__) keeps Snapshot.epoch monotone across
+            # restarts even when pre-crash aborts bumped it
+            self._wal.append(op, _epoch=self.log.epoch, **fields)
+            self._c_wal_records.inc()
+
+    def _apply_wal_record(self, op: str, fields: dict) -> None:
+        if op == "add":
+            self.add(fields["points"], meta=fields.get("meta"))
+        elif op == "bulk_load":
+            self.bulk_load(fields["points"], meta=fields.get("meta"))
+        elif op == "delete":
+            self.delete(fields["gids"])
+        elif op == "flush":
+            self.flush()
+        elif op == "compact":
+            self.compact()
+        else:
+            raise ValueError(f"unknown WAL record op {op!r}")
+
+    def add(self, points: np.ndarray, meta=None) -> np.ndarray:
+        """Insert points; returns their assigned global ids. `meta` is
+        an opaque host blob persisted with the WAL record only (the
+        sharded layer stashes global ids there) — it does not affect
+        the index itself."""
         pts = np.asarray(points, np.float32).reshape(-1, self.config.dim)
-        try:
-            gids = self.log.assign(len(pts))
-            delta, segments = self._begin()
-            i = 0
-            while i < len(pts):
-                take = min(delta.free, len(pts) - i)
-                if take:
-                    slots = np.arange(delta.size, delta.size + take)
-                    chunk_g = gids[i : i + take]
-                    delta = delta.append(pts[i : i + take], chunk_g)
-                    self.log.place_delta(chunk_g, slots)
-                    i += take
-                if delta.free == 0:
-                    delta, segments = self._seal_delta(delta, segments)
-            self._c_inserts.inc(len(pts))
-            self._commit(delta, segments)
-        except BaseException:
-            self._recover_log()
-            raise
+        with self._write_lock:
+            self._wal_append("add", points=pts, meta=meta)
+            try:
+                gids = self.log.assign(len(pts))
+                delta, segments = self._begin()
+                i = 0
+                while i < len(pts):
+                    take = min(delta.free, len(pts) - i)
+                    if take:
+                        slots = np.arange(delta.size, delta.size + take)
+                        chunk_g = gids[i : i + take]
+                        delta = delta.append(pts[i : i + take], chunk_g)
+                        self.log.place_delta(chunk_g, slots)
+                        i += take
+                    if delta.free == 0:
+                        delta, segments = self._seal_delta(delta, segments)
+                self._c_inserts.inc(len(pts))
+                self._commit(delta, segments)
+            except BaseException:
+                self._recover_log()
+                raise
         return gids
 
-    def bulk_load(self, points: np.ndarray) -> np.ndarray:
+    def bulk_load(self, points: np.ndarray, meta=None) -> np.ndarray:
         """Build one segment directly from a batch (the LSM bulk path —
         skips the delta arena and any intermediate merges)."""
         pts = np.asarray(points, np.float32).reshape(-1, self.config.dim)
-        try:
-            gids = self.log.assign(len(pts))
-            delta, segments = self._begin()
-            if len(pts):
-                self._install(
-                    segments,
-                    Segment.from_points(
-                        pts, gids, self.config.spec, backend=self.config.backend,
-                        storage_dtype=self.config.storage_dtype,
-                    ),
-                )
-                # repeated bulk loads must still respect the tier bound
-                delta, segments = self._maybe_compact(delta, segments)
-            self._c_bulk_loads.inc()
-            self._c_inserts.inc(len(pts))
-            self._commit(delta, segments)
-        except BaseException:
-            self._recover_log()
-            raise
+        with self._write_lock:
+            self._wal_append("bulk_load", points=pts, meta=meta)
+            try:
+                gids = self.log.assign(len(pts))
+                delta, segments = self._begin()
+                if len(pts):
+                    self._install(
+                        segments,
+                        Segment.from_points(
+                            pts, gids, self.config.spec,
+                            backend=self.config.backend,
+                            storage_dtype=self.config.storage_dtype,
+                        ),
+                    )
+                    # repeated bulk loads must still respect the tier bound
+                    delta, segments = self._maybe_compact(delta, segments)
+                self._c_bulk_loads.inc()
+                self._c_inserts.inc(len(pts))
+                self._commit(delta, segments)
+            except BaseException:
+                self._recover_log()
+                raise
         return gids
 
     def delete(self, gids: np.ndarray) -> int:
         """Tombstone points by global id; returns how many were live."""
-        try:
-            grouped = self.log.pop(np.atleast_1d(np.asarray(gids, np.int64)))
-            if not grouped:
-                return 0
-            delta, segments = self._begin()
-            n = 0
-            for holder, pairs in grouped.items():
-                pos = np.asarray([p for p, _ in pairs], np.int64)
-                n += len(pos)
-                if holder == DELTA:
-                    delta = delta.tombstone(pos)
-                else:
-                    segments[holder] = segments[holder].tombstone(pos)
-            delta, segments = self._maybe_compact(delta, segments)
-            self._c_deletes.inc(n)
-            self._commit(delta, segments)
-        except BaseException:
-            self._recover_log()
-            raise
+        g = np.atleast_1d(np.asarray(gids, np.int64))
+        with self._write_lock:
+            self._wal_append("delete", gids=g)
+            try:
+                grouped = self.log.pop(g)
+                if not grouped:
+                    return 0
+                delta, segments = self._begin()
+                n = 0
+                for holder, pairs in grouped.items():
+                    pos = np.asarray([p for p, _ in pairs], np.int64)
+                    n += len(pos)
+                    if holder == DELTA:
+                        delta = delta.tombstone(pos)
+                    else:
+                        segments[holder] = segments[holder].tombstone(pos)
+                delta, segments = self._maybe_compact(delta, segments)
+                self._c_deletes.inc(n)
+                self._commit(delta, segments)
+            except BaseException:
+                self._recover_log()
+                raise
         return n
 
     def flush(self) -> None:
         """Seal a partially-filled delta into a segment (e.g. before a
         latency-critical read phase: tree search beats arena scan)."""
-        try:
-            delta, segments = self._begin()
-            if delta.size:
-                delta, segments = self._seal_delta(delta, segments)
-                self._commit(delta, segments)
-        except BaseException:
-            self._recover_log()
-            raise
+        with self._write_lock:
+            self._wal_append("flush")
+            try:
+                delta, segments = self._begin()
+                if delta.size:
+                    delta, segments = self._seal_delta(delta, segments)
+                    self._commit(delta, segments)
+            except BaseException:
+                self._recover_log()
+                raise
 
     def compact(self) -> None:
         """Full compaction: everything live into one fresh segment; all
         tombstones purged, delta drained."""
-        try:
-            pts, gids = self.live_points()
-            delta = DeltaBuffer.empty(
-                self.config.delta_capacity, self.config.dim
-            )
-            segments: Dict[int, Segment] = {}
-            if len(pts):
-                self._install(
-                    segments,
-                    Segment.from_points(
-                        pts, gids, self.config.spec, backend=self.config.backend,
-                        storage_dtype=self.config.storage_dtype,
-                    ),
+        with self._write_lock:
+            self._wal_append("compact")
+            try:
+                pts, gids = self.live_points()
+                delta = DeltaBuffer.empty(
+                    self.config.delta_capacity, self.config.dim
                 )
-            self._c_compactions.inc()
-            self.log.bump_epoch()  # full remap: every gid moved holders
-            self._commit(delta, segments)
-        except BaseException:
-            self._recover_log()
-            raise
+                segments: Dict[int, Segment] = {}
+                if len(pts):
+                    self._install(
+                        segments,
+                        Segment.from_points(
+                            pts, gids, self.config.spec,
+                            backend=self.config.backend,
+                            storage_dtype=self.config.storage_dtype,
+                        ),
+                    )
+                self._c_compactions.inc()
+                self.log.bump_epoch()  # full remap: every gid moved holders
+                self._commit(delta, segments)
+            except BaseException:
+                self._recover_log()
+                raise
+
+    # -- background maintenance ----------------------------------------------
+    def maintain(self) -> bool:
+        """Run pending size-tiered / purge merges NOW, regardless of
+        `defer_merges`. The background compaction thread's work unit;
+        also the manual hook after a deferred write burst. Returns
+        whether anything was merged (and committed).
+
+        NOT WAL-logged: merges are derived state. Recovery replays the
+        logical ops; with deferred merges the physical segment layout
+        after replay may differ from the pre-crash layout, but search
+        results are exact either way (layout only shapes the plan)."""
+        with self._write_lock:
+            try:
+                delta, segments = self._begin()
+                before = set(segments)
+                delta2, segments2 = self._maybe_compact(
+                    delta, segments, force=True
+                )
+                if delta2 is delta and set(segments2) == before:
+                    return False
+                self._c_maintenance.inc()
+                self._commit(delta2, segments2)
+                return True
+            except BaseException:
+                self._recover_log()
+                raise
+
+    def start_background_compaction(self, interval: float = 0.05) -> None:
+        """Run `maintain()` on a daemon thread whenever there is merge
+        work, polling every `interval` seconds when idle. Queries are
+        never blocked: readers hold MVCC snapshots and the merge commit
+        is one atomic swap; only concurrent writers briefly serialize
+        on the writer lock."""
+        if self._bg_thread is not None:
+            return
+        self._bg_stop.clear()
+
+        def _loop() -> None:
+            while not self._bg_stop.is_set():
+                try:
+                    changed = self.maintain()
+                except Exception:
+                    changed = False  # log was recovered; retry later
+                if not changed:
+                    self._bg_stop.wait(interval)
+
+        self._bg_thread = threading.Thread(
+            target=_loop, name="repro-compaction", daemon=True
+        )
+        self._bg_thread.start()
+
+    def stop_background_compaction(self) -> None:
+        if self._bg_thread is None:
+            return
+        self._bg_stop.set()
+        self._bg_thread.join()
+        self._bg_thread = None
+
+    def close(self) -> None:
+        """Stop the background thread and close the WAL file handle.
+        The index itself stays usable for reads."""
+        self.stop_background_compaction()
+        if self._wal is not None:
+            self._wal.close()
+            self._wal = None
 
     # -- read path -----------------------------------------------------------
     def snapshot(self) -> Snapshot:
@@ -328,6 +502,7 @@ class StreamingIndex:
             delta_size=state.delta.size,
             delta_n_live=state.delta.n_live,
             epoch=self.log.epoch,
+            cache_tag=self.cache_tag,
         )
 
     def constrained_knn(self, queries, k: int, r) -> search_mod.StreamResult:
@@ -399,8 +574,12 @@ class StreamingIndex:
             self._c_sealed_points.inc(len(pts))
         return self._maybe_compact(delta, segments)
 
-    def _maybe_compact(self, delta, segments):
+    def _maybe_compact(self, delta, segments, force: bool = False):
         cfg = self.config
+        if cfg.defer_merges and not force:
+            # merges are the background thread's job (maintain());
+            # the write path just appends/tombstones and returns
+            return delta, segments
         while True:
             # drop fully-dead segments outright
             for uid in [u for u, s in segments.items() if s.n_live == 0]:

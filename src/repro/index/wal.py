@@ -1,0 +1,111 @@
+"""Write-ahead log for the streaming index: host-side durability.
+
+The device-side LSM is volatile — delta arenas and segments die with
+the process. The WAL makes the *logical* mutation stream durable
+instead of the physical state: every public mutator appends one record
+(op name + payloads) BEFORE applying, and recovery replays the records
+through the same mutators, rebuilding the index deterministically.
+Replaying the log therefore reproduces the exact live point set, the
+exact gid assignment (gids are handed out in record order), and — with
+inline merges (the default) — even the exact segment layout, so
+post-recovery search results are bit-identical to pre-crash results.
+
+Format: a 6-byte magic header, then length-prefixed records::
+
+    [u32 length][u32 crc32][pickle((op, fields))]
+
+Torn tails are expected (the process can die mid-append): replay stops
+cleanly at the first short or checksum-failing record and reports how
+many bytes it trusted, so the writer can truncate the garbage before
+appending again. Records are pickled host data (numpy arrays, scalars,
+small metadata blobs) — never device arrays.
+
+Each record also carries the tombstone-log epoch observed at append
+time (stamped by the index, see `streaming.py`), so a recovered index
+can fence its epoch to at least the last durably-recorded value and
+`Snapshot.epoch` never moves backward across a restart.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import struct
+import zlib
+from typing import Iterator, List, Tuple
+
+_MAGIC = b"RWAL1\n"
+_HDR = struct.Struct("<II")  # (payload length, crc32 of payload)
+
+
+class WriteAheadLog:
+    """Append-only record writer (one per index instance).
+
+    Opening an existing log seeks past its valid prefix and truncates
+    any torn tail, so a crash mid-append never corrupts later records.
+    """
+
+    def __init__(self, path: str, sync: bool = False) -> None:
+        self.path = path
+        self._sync = sync
+        fresh = not os.path.exists(path) or os.path.getsize(path) == 0
+        if not fresh:
+            # drop a torn tail before appending after it
+            _, valid = scan(path)
+            with open(path, "r+b") as f:
+                f.truncate(valid)
+        self._f = open(path, "ab")
+        if fresh:
+            self._f.write(_MAGIC)
+            self._f.flush()
+
+    def append(self, op: str, **fields) -> None:
+        blob = pickle.dumps((op, fields), protocol=pickle.HIGHEST_PROTOCOL)
+        self._f.write(_HDR.pack(len(blob), zlib.crc32(blob)) + blob)
+        self._f.flush()
+        if self._sync:
+            os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.close()
+
+
+def scan(path: str) -> Tuple[List[Tuple[str, dict]], int]:
+    """All intact records plus the byte offset of the valid prefix.
+
+    Stops (silently) at the first torn or checksum-failing record — the
+    WAL contract is that everything BEFORE the tear is trustworthy and
+    everything after it never finished committing.
+    """
+    records: List[Tuple[str, dict]] = []
+    if not os.path.exists(path):
+        return records, 0
+    with open(path, "rb") as f:
+        magic = f.read(len(_MAGIC))
+        if magic != _MAGIC:
+            return records, 0
+        valid = f.tell()
+        while True:
+            hdr = f.read(_HDR.size)
+            if len(hdr) < _HDR.size:
+                break
+            length, crc = _HDR.unpack(hdr)
+            blob = f.read(length)
+            if len(blob) < length or zlib.crc32(blob) != crc:
+                break
+            try:
+                op, fields = pickle.loads(blob)
+            except Exception:
+                break
+            records.append((op, fields))
+            valid = f.tell()
+    return records, valid
+
+
+def replay(path: str) -> Iterator[Tuple[str, dict]]:
+    """Iterate the intact records of a log (see `scan`)."""
+    records, _ = scan(path)
+    return iter(records)
+
+
+__all__ = ["WriteAheadLog", "scan", "replay"]

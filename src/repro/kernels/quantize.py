@@ -16,9 +16,11 @@ Supported storage dtypes:
   * ``float32``  — identity (no side buffer, qerr = 0);
   * ``bfloat16`` — truncate-to-nearest cast, dequant is a plain widen.
     Relative coordinate error <= 2^-8; safe everywhere;
-  * ``int8``     — symmetric per-LEAF scale ``max|coord| / 127``
-    (f32, broadcast per candidate at stream time), dequant
-    ``q * scale``. Good when coordinates within a leaf share magnitude
+  * ``int8``     — symmetric per-LEAF scale: the next POWER OF TWO
+    above ``max|coord| / 127`` (f32, broadcast per candidate at
+    stream time), dequant ``q * scale`` — exact in f32, so kernel
+    keys are bitwise reproducible under any fma contraction. Good
+    when coordinates within a leaf share magnitude
     (clustered data after the ball*-tree's PCA splits); degrades —
     i.e. qerr grows and the rescore falls back more — when a leaf
     mixes magnitudes across dimensions.
@@ -74,10 +76,20 @@ def quantize_leaves(
         leaf_q = jnp.asarray(lp).astype(jnp.bfloat16)
         deq = np.asarray(leaf_q.astype(jnp.float32), np.float64)
         scale = None
-    else:  # int8: symmetric per-leaf scale, zero-safe
+    else:  # int8: symmetric per-leaf POWER-OF-TWO scale, zero-safe.
+        # The scale is the next pow2 >= max|coord|/127, not the exact
+        # quotient: a pow2 scale makes the kernel's dequant product
+        # ``int8 * scale`` a pure exponent shift — EXACT in f32 — so
+        # the quantized keys are bitwise identical to the dequantized
+        # oracle regardless of backend fma contraction (XLA:CPU fuses
+        # the dequant multiply into the distance subtraction; with an
+        # exact product the fused and two-step roundings coincide).
+        # Costs at most one bit of quantization resolution, which the
+        # empirical seal-time `qerr` bound below absorbs automatically.
         amax = np.abs(lp).max(axis=(1, 2)).astype(np.float32)  # (L,)
-        scale_np = np.where(amax > 0.0, amax / np.float32(127.0), 1.0)
-        scale_np = scale_np.astype(np.float32)
+        mant, exp = np.frexp((amax / np.float32(127.0)).astype(np.float64))
+        scale_np = np.where(mant == 0.5, np.exp2(exp - 1), np.exp2(exp))
+        scale_np = np.where(amax > 0.0, scale_np, 1.0).astype(np.float32)
         qs = np.clip(
             np.rint(lp / scale_np[:, None, None]), -127, 127
         ).astype(np.int8)

@@ -494,6 +494,17 @@ def _leaf_kernel(
     q = q_ref[...].astype(jnp.float32)  # (bm, bk)
     c = c_ref[...].astype(jnp.float32)  # (bm, bn, bk)
     if sc_ref is not None:
+        # the dequant product must round identically to the two-step
+        # oracle (`quantize.dequantize`: widen, one f32 multiply) even
+        # when the backend contracts it into the subtraction below as a
+        # single-rounding fma (XLA:CPU does; an HLO optimization
+        # barrier does not stop LLVM codegen contraction). The encoder
+        # guarantees this structurally: int8 scales are powers of two
+        # (`quantize.quantize_leaves`), so `c * sc` is a pure exponent
+        # shift — EXACT in f32 — and fused vs two-step rounding
+        # coincide bitwise on every backend. That exactness is what
+        # lets the containment certificate treat the kernel's k'-th
+        # key as a bitwise fact of the dequantized candidate set.
         c = c * sc_ref[...][:, :, None]
     diff = q[:, None, :] - c
     acc_ref[...] += (diff * diff).sum(axis=2)

@@ -353,6 +353,15 @@ def mla_decode(params, x, cache, pos, cfg: ModelConfig):
     kr = jax.lax.dynamic_update_slice_in_dim(
         cache["kr"], kr_new.astype(cache["kr"].dtype), pos, axis=1
     )
+    # The absorbed intermediates stay f32 end to end: q_abs and ctx
+    # live in the kv_lora basis, where a bf16 round-trip between
+    # einsums loses precision the non-absorbed prefill never sees
+    # (prefill contracts per-head qk_nope keys, never materializing a
+    # lora-basis activation). Those extra decode-only roundings were
+    # enough to flip the MoE router's top-k and break prefill/decode
+    # parity beyond the test tolerance; keeping the absorbed
+    # chain in f32 removes the decode-side perturbation at negligible
+    # cost (decode is T=1, the tensors are tiny).
     q_abs = jnp.einsum(
         "bhk,lhk->bhl",
         q_nope[:, 0].astype(COMPUTE_DTYPE),
@@ -360,13 +369,13 @@ def mla_decode(params, x, cache, pos, cfg: ModelConfig):
         preferred_element_type=jnp.float32,
     )
     s = jnp.einsum(
-        "bhl,btl->bht", q_abs.astype(COMPUTE_DTYPE), ckv.astype(COMPUTE_DTYPE),
+        "bhl,btl->bht", q_abs, ckv.astype(jnp.float32),
         preferred_element_type=jnp.float32,
     )
     s = s + jnp.einsum(
         "bhr,btr->bht",
-        q_rope.astype(COMPUTE_DTYPE),
-        kr.astype(COMPUTE_DTYPE),
+        q_rope.astype(jnp.float32),
+        kr.astype(jnp.float32),
         preferred_element_type=jnp.float32,
     )
     s = s * (qn + qr) ** -0.5
@@ -375,12 +384,12 @@ def mla_decode(params, x, cache, pos, cfg: ModelConfig):
     s = jnp.where(valid[None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum(
-        "bht,btl->bhl", p.astype(COMPUTE_DTYPE), ckv.astype(COMPUTE_DTYPE),
+        "bht,btl->bhl", p, ckv.astype(jnp.float32),
         preferred_element_type=jnp.float32,
     )
     o = jnp.einsum(
-        "bhl,lhv->bhv", ctx.astype(COMPUTE_DTYPE),
-        params["w_uv"].astype(COMPUTE_DTYPE),
+        "bhl,lhv->bhv", ctx,
+        params["w_uv"].astype(jnp.float32),
         preferred_element_type=jnp.float32,
     ).astype(COMPUTE_DTYPE)
     y = matmul(o[:, None], params["w_o"], "bshk,hkd->bsd")

@@ -183,7 +183,10 @@ def plan(snapshot) -> List[ClassGroup]:
 # replacement lands in its predecessor's slot); the merge over stacked
 # slots is order-exact on distances, so results are unaffected.
 _STACK_CACHE: "collections.OrderedDict" = collections.OrderedDict()
-_STACK_CACHE_MAX = 8
+# sized for sharded serving: shards carry distinct cache tags (see
+# Snapshot.cache_tag), so e.g. 4 shards x 2 classes each occupy 8
+# buckets of current batches before any predecessor retention
+_STACK_CACHE_MAX = 16
 _STACK_LOCK = threading.Lock()
 
 
@@ -244,26 +247,30 @@ def _incremental_update(
     return _StackEntry(stacked, gids, tuple(slot_tokens), leaf_q, qscale)
 
 
-def _stacked_views(group: ClassGroup, epoch: int = 0) -> _StackEntry:
+def _stacked_views(group: ClassGroup, epoch: int = 0, tag=None) -> _StackEntry:
     """The stacked batch entry for one shape class — (S_pow2, …) stacked
     DeviceTree, gid table, and (for quantized classes) the stacked
     narrow leaf buffers — memoized on (class incl. storage dtype,
     gid-remap epoch, member token set). The epoch is strictly a
     staleness fence: tokens already change on merges, but keying on the
     epoch too guarantees batches derived from a pre-remap gid layout
-    can never be served to a post-remap reader."""
-    key = (group.cls, epoch, frozenset(v.token for v in group.views))
+    can never be served to a post-remap reader. `tag` is the snapshot's
+    cache_tag: indexes that legitimately coexist with the same shape
+    class (serving shards) carry distinct tags, so class-level
+    predecessor eviction never crosses index boundaries."""
+    clskey = (group.cls, tag)
+    key = (clskey, epoch, frozenset(v.token for v in group.views))
     with _STACK_LOCK:
         hit = _STACK_CACHE.get(key)
         if hit is not None:
             _STACK_CACHE.move_to_end(key)
             return hit
-        # most recent predecessor batch of this class, if any
+        # most recent predecessor batch of this class (same tag), if any
         base = next(
             (
                 _STACK_CACHE[s]
                 for s in reversed(_STACK_CACHE)
-                if s[0] == group.cls
+                if s[0] == clskey
             ),
             None,
         )
@@ -305,7 +312,7 @@ def _stacked_views(group: ClassGroup, epoch: int = 0) -> _StackEntry:
     # exact-count test assertions; racing cache-missers each count)
     (_C_STACK_INCR if incremental else _C_STACK_FULL).inc()
     with _STACK_LOCK:
-        same = [s for s in _STACK_CACHE if s[0] == group.cls]
+        same = [s for s in _STACK_CACHE if s[0] == clskey]
         for stale in same[:-1]:  # keep only the most recent predecessor
             del _STACK_CACHE[stale]
         _STACK_CACHE[key] = entry
@@ -425,7 +432,11 @@ def execute(snapshot, queries, spec: QuerySpec) -> EngineResult:
         groups = plan(snapshot)
     for group in groups:
         with obs.span("engine.stack"):
-            entry = _stacked_views(group, getattr(snapshot, "epoch", 0))
+            entry = _stacked_views(
+                group,
+                getattr(snapshot, "epoch", 0),
+                getattr(snapshot, "cache_tag", None),
+            )
         res = _dispatch_stacked(
             entry.stacked,
             entry.gids,

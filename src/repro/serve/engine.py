@@ -7,6 +7,7 @@ NamedShardings and these calls are pjit'd SPMD programs.
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Any, Callable, List, Optional, Tuple
 
 import numpy as np
@@ -23,6 +24,13 @@ class Engine:
     cfg: ModelConfig
     values: Any
     cache_len: int
+    # base PRNG seed for the per-request sampling keys: each generate()
+    # call without an explicit key derives key = fold_in(base, counter),
+    # so concurrent/consecutive requests sample DIFFERENT streams (the
+    # old behavior — PRNGKey(0) every call — made temperature sampling
+    # identical across requests). The default seed keeps an engine as a
+    # whole reproducible; pass `key=` per call to pin one request.
+    seed: int = 0
     _prefill: Callable = None
     _decode: Callable = None
 
@@ -37,6 +45,16 @@ class Engine:
 
         self._prefill = jax.jit(prefill_fn)
         self._decode = jax.jit(decode_fn, donate_argnums=(1,))
+        self._base_key = jax.random.PRNGKey(self.seed)
+        self._req_count = 0
+        self._key_lock = threading.Lock()
+
+    def _next_request_key(self) -> jax.Array:
+        """A fresh sampling key for one request (thread-safe counter)."""
+        with self._key_lock:
+            self._req_count += 1
+            n = self._req_count
+        return jax.random.fold_in(self._base_key, n)
 
     def generate(
         self,
@@ -47,13 +65,18 @@ class Engine:
         capture_hidden: bool = False,
     ) -> Tuple[np.ndarray, List[np.ndarray]]:
         """Greedy/temperature decode. Returns (tokens (B, new), per-step
-        last-layer logits if capture_hidden)."""
+        last-layer logits if capture_hidden).
+
+        With `key=None` (the serving default) each call samples under
+        its own derived key — see `_next_request_key`. Reproducibility
+        tests pass an explicit `key` and get the same tokens every
+        time."""
         B, S = prompt.shape
         logits, cache = self._prefill(self.values, prompt)
         last = logits[:, -1]
         out = []
         captured = []
-        key = key if key is not None else jax.random.PRNGKey(0)
+        key = key if key is not None else self._next_request_key()
         for i in range(max_new_tokens):
             if temperature > 0:
                 key, sub = jax.random.split(key)

@@ -1,0 +1,252 @@
+"""Serving frontend: continuous batching of search requests into
+power-of-two batch classes over the streaming index.
+
+Request lifecycle::
+
+    caller thread:      submit(vec) -> Future    (thread-safe queue)
+    dispatcher thread:  drain queue -> pad batch to its pow2 class ->
+                        ONE index search per batch -> respond queue
+    responder thread:   materialize on host, slice per request,
+                        resolve futures, record latency
+
+The dispatcher always takes everything currently queued (up to
+`max_batch`) as one batch — continuous batching, no fixed timer slots —
+and rounds the batch up to the next power of two, padding with copies
+of the first row. Query shapes therefore come from a closed set of
+O(log2 max_batch) classes, each compiled once; `start()` warms every
+class against the live snapshot before serving, so no caller pays a
+first-compile stall. The respond backlog runs on its own thread:
+device dispatch for batch N+1 is never blocked behind host
+materialization/future resolution of batch N, and slow callers never
+block either thread.
+
+Works over any index with the streaming search surface
+(`constrained_knn(queries, k, r)` + `dim`): a `StreamingIndex`, a
+`ShardedStreamingIndex`, or anything API-compatible.
+
+Observability (the serving-smoke acceptance surface):
+
+  * ``serve.frontend.requests`` — submissions;
+  * ``serve.frontend.dispatches{qclass=B}`` — batches dispatched per
+    pow2 class: the label set is bounded by the number of classes,
+    which is how the smoke bench asserts per-class compilation;
+  * ``serve.frontend.warmup_dispatches`` — startup warmup, counted
+    apart from live traffic;
+  * ``serve.frontend.batch_occupancy`` — histogram of real (unpadded)
+    batch sizes;
+  * ``serve.frontend.latency_ms`` — submit→resolve latency histogram.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro import obs
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class FrontendConfig:
+    k: int = 8
+    radius: float = float("inf")
+    # largest batch one dispatch serves; also caps how much of the
+    # queue one iteration drains. Must be a power of two.
+    max_batch: int = 64
+    # bound on queued-but-undispatched requests: submit() blocks once
+    # the backlog reaches this (backpressure instead of OOM)
+    max_queue: int = 4096
+    # pre-compile + warm every batch class at start()
+    warmup: bool = True
+
+    def __post_init__(self) -> None:
+        if self.max_batch < 1 or next_pow2(self.max_batch) != self.max_batch:
+            raise ValueError("max_batch must be a power of two >= 1")
+
+    @property
+    def batch_classes(self) -> Tuple[int, ...]:
+        out, b = [], 1
+        while b <= self.max_batch:
+            out.append(b)
+            b *= 2
+        return tuple(out)
+
+
+class SearchReply(NamedTuple):
+    gids: np.ndarray       # (k,) global ids, -1 = no result
+    distances: np.ndarray  # (k,) +inf where no result
+
+
+class _Request(NamedTuple):
+    vec: np.ndarray
+    future: Future
+    t_submit: float
+
+
+_STOP = object()  # queue sentinel: drains FIFO behind pending requests
+
+
+class SearchFrontend:
+    def __init__(self, index, config: Optional[FrontendConfig] = None):
+        self.index = index
+        self.config = config or FrontendConfig()
+        self._queue: "queue.Queue" = queue.Queue(self.config.max_queue)
+        self._respond: "queue.Queue" = queue.Queue()
+        self._dispatcher: Optional[threading.Thread] = None
+        self._responder: Optional[threading.Thread] = None
+        self._started = False
+        reg = obs.REGISTRY
+        self._c_requests = reg.counter("serve.frontend.requests")
+        self._c_warmup = reg.counter("serve.frontend.warmup_dispatches")
+        self._c_dispatch = {
+            b: reg.counter("serve.frontend.dispatches", qclass=str(b))
+            for b in self.config.batch_classes
+        }
+        self._h_occupancy = reg.histogram(
+            "serve.frontend.batch_occupancy", unit="requests"
+        )
+        self._h_latency = reg.histogram(
+            "serve.frontend.latency_ms", unit="ms"
+        )
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "SearchFrontend":
+        if self._started:
+            return self
+        if self.config.warmup:
+            self._warmup()
+        self._dispatcher = threading.Thread(
+            target=self._dispatch_loop, name="repro-serve-dispatch",
+            daemon=True,
+        )
+        self._responder = threading.Thread(
+            target=self._respond_loop, name="repro-serve-respond",
+            daemon=True,
+        )
+        self._dispatcher.start()
+        self._responder.start()
+        self._started = True
+        return self
+
+    def stop(self) -> None:
+        """Graceful drain: everything submitted before stop() is still
+        answered (the sentinel queues FIFO behind it), then both
+        threads exit."""
+        if not self._started:
+            return
+        self._queue.put(_STOP)
+        self._dispatcher.join()
+        self._respond.put(_STOP)
+        self._responder.join()
+        self._dispatcher = self._responder = None
+        self._started = False
+
+    def __enter__(self) -> "SearchFrontend":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    def _warmup(self) -> None:
+        """One dispatch per batch class against the live snapshot: the
+        jit cache then holds every query shape serving will ever see,
+        so no live request pays a compile."""
+        cfg = self.config
+        dummy = np.zeros((1, self.index.dim), np.float32)
+        for b in cfg.batch_classes:
+            self._search_batch(np.broadcast_to(dummy, (b, self.index.dim)))
+            self._c_warmup.inc()
+
+    # -- client surface ------------------------------------------------------
+    def submit(self, vec: np.ndarray) -> Future:
+        """Enqueue one query; returns a Future resolving to a
+        `SearchReply`. Blocks only when the backlog is at max_queue."""
+        if not self._started:
+            raise RuntimeError("frontend not started")
+        v = np.asarray(vec, np.float32).reshape(self.index.dim)
+        fut: Future = Future()
+        self._c_requests.inc()
+        self._queue.put(_Request(v, fut, time.perf_counter()))
+        return fut
+
+    def search(self, vec: np.ndarray, timeout: Optional[float] = None):
+        """Synchronous convenience: submit + wait."""
+        return self.submit(vec).result(timeout)
+
+    # -- dispatcher ----------------------------------------------------------
+    def _search_batch(self, qarr: np.ndarray):
+        cfg = self.config
+        return self.index.constrained_knn(qarr, cfg.k, cfg.radius)
+
+    def _take_batch(self, first) -> List[_Request]:
+        """The continuous-batching drain: the triggering request plus
+        whatever else is already queued, up to max_batch."""
+        batch = [first]
+        while len(batch) < self.config.max_batch:
+            try:
+                item = self._queue.get_nowait()
+            except queue.Empty:
+                break
+            if item is _STOP:
+                # push back so the outer loop terminates after this batch
+                self._queue.put(_STOP)
+                break
+            batch.append(item)
+        return batch
+
+    def _dispatch_loop(self) -> None:
+        while True:
+            first = self._queue.get()
+            if first is _STOP:
+                return
+            batch = self._take_batch(first)
+            n = len(batch)
+            b_cls = next_pow2(n)
+            qarr = np.empty((b_cls, self.index.dim), np.float32)
+            for i, req in enumerate(batch):
+                qarr[i] = req.vec
+            qarr[n:] = batch[0].vec  # pad rows: answered, then dropped
+            try:
+                res = self._search_batch(qarr)
+            except BaseException as e:  # fail the batch, keep serving
+                for req in batch:
+                    req.future.set_exception(e)
+                continue
+            self._c_dispatch[b_cls].inc()
+            self._h_occupancy.observe(n)
+            self._respond.put((batch, res))
+
+    # -- responder -----------------------------------------------------------
+    def _respond_loop(self) -> None:
+        while True:
+            item = self._respond.get()
+            if item is _STOP:
+                return
+            batch, res = item
+            # materialize once per batch (np.asarray is a no-op when the
+            # index already returned host arrays), then slice per request
+            gids = np.asarray(res.gids)
+            dists = np.asarray(res.distances)
+            now = time.perf_counter()
+            for i, req in enumerate(batch):
+                req.future.set_result(SearchReply(gids[i], dists[i]))
+                self._h_latency.observe((now - req.t_submit) * 1e3)
+
+
+__all__ = [
+    "FrontendConfig",
+    "SearchFrontend",
+    "SearchReply",
+    "next_pow2",
+]

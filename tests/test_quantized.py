@@ -134,6 +134,38 @@ def test_quantized_bit_identical_to_f32(sdt):
     )
 
 
+def test_int8_keys_bitwise_match_dequantized_oracle():
+    """Regression (PR 10 follow-up): the int8 scan's squared keys must
+    be BITWISE identical to running the same kernel on the dequantized
+    f32 buffer. XLA contracts the in-kernel dequant multiply into the
+    distance subtraction (one fused fma rounding), which put int8 keys
+    1 ulp off the two-step oracle; pow2 per-leaf scales make the
+    product exact so both roundings coincide. Guards the pow2
+    invariant and the key identity the containment certificate's
+    tightened margin relies on."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(21)
+    pts = rng.normal(size=(6, 40, 7)).astype(np.float32) * np.exp(
+        rng.normal(size=(6, 1, 1))
+    ).astype(np.float32)  # mixed magnitudes across leaves
+    leaf_q, scale, _ = quantize.quantize_leaves(pts, "int8")
+    # the structural invariant: every scale is a power of two
+    mant, _ = np.frexp(np.asarray(scale, np.float64))
+    assert np.all(mant == 0.5), "int8 scales must be powers of two"
+    deq = quantize.dequantize(leaf_q, scale)
+    q = rng.normal(size=(6, 7)).astype(np.float32)
+    gids = np.arange(6 * 40, dtype=np.int32).reshape(6, 40)
+    csc = np.broadcast_to(np.asarray(scale)[:, None], (6, 40))
+    sq_q, g_q, s_q = ops.leaf_topk_l2_raw(
+        q, leaf_q, gids, np.inf, 12, cscale=np.ascontiguousarray(csc)
+    )
+    sq_f, g_f, s_f = ops.leaf_topk_l2_raw(q, deq, gids, np.inf, 12)
+    np.testing.assert_array_equal(np.asarray(sq_q), np.asarray(sq_f))
+    np.testing.assert_array_equal(np.asarray(g_q), np.asarray(g_f))
+    np.testing.assert_array_equal(np.asarray(s_q), np.asarray(s_f))
+
+
 def test_outward_radius_rounding_bounds():
     """The widened radius is an upper bound on every member distance
     through f32 arithmetic AND survives the quantized round trip: for

@@ -1,0 +1,278 @@
+"""Sharded streaming-LSM oracle tests.
+
+The subprocess leg forces 4 host devices and drives a 4-shard
+`ShardedStreamingIndex` (real `shard_map` cross-shard fold) through a
+randomized insert/delete/query interleave against a single-device
+`StreamingIndex` fed the SAME operation sequence:
+
+  * after a flush barrier the two must agree BIT-FOR-BIT (with the
+    delta arenas drained, every live point is evaluated by the sealed
+    read path — fused traversal + exact f32 rescore — whose per-point
+    distances are layout-invariant);
+  * mid-interleave (deltas non-empty) the result SETS must agree
+    exactly, with distances tight to float evaluation-order slop (the
+    arena scan kernel and the leaf kernel round differently by ≤ ulps);
+  * batch sizes are odd on purpose: shard sizes stay non-divisible;
+  * one shard is fully tombstoned and must short-circuit, not break;
+  * the index is killed and recovered from its WAL, preserving results
+    bitwise and never moving `Snapshot.epoch` backward.
+
+The in-process tests cover the same machinery where 1 CPU device is
+enough: the host-fold path, plain-index WAL replay (incl. torn tails),
+and deferred merges + the background compaction thread.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from repro.index import StreamingConfig, StreamingIndex
+from repro.index import wal as wal_mod
+from repro.index.sharded import ShardedStreamingIndex
+
+
+def test_sharded_streaming_interleave_oracle_4dev():
+    code = textwrap.dedent(
+        """
+        import os, tempfile
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np, jax
+        from repro.index import StreamingConfig, StreamingIndex
+        from repro.index.sharded import ShardedStreamingIndex, data_mesh
+
+        assert jax.device_count() == 4
+        rng = np.random.default_rng(5)
+        dim, k, r = 6, 5, 2.5
+        mesh = data_mesh(4)
+        assert mesh is not None, "4 forced devices must give a real mesh"
+        wal_dir = tempfile.mkdtemp()
+        mk = lambda: StreamingConfig(dim=dim, delta_capacity=48,
+                                     merge_factor=3)
+        sh = ShardedStreamingIndex(mk(), n_shards=4, mesh=mesh,
+                                   wal_dir=wal_dir)
+        ref = StreamingIndex(mk())
+
+        def check_flushed(tag):
+            sh.flush(); ref.flush()
+            q = rng.normal(size=(7, dim)).astype(np.float32)
+            a = sh.constrained_knn(q, k, r)
+            b = ref.constrained_knn(q, k, r)
+            np.testing.assert_array_equal(a.gids, b.gids, err_msg=tag)
+            np.testing.assert_array_equal(a.distances, b.distances,
+                                          err_msg=tag)
+
+        def check_sets(tag):
+            q = rng.normal(size=(5, dim)).astype(np.float32)
+            a = sh.constrained_knn(q, k, r)
+            b = ref.constrained_knn(q, k, r)
+            for i in range(len(q)):
+                assert (set(a.gids[i][a.gids[i] >= 0].tolist())
+                        == set(b.gids[i][b.gids[i] >= 0].tolist())), tag
+            np.testing.assert_allclose(a.distances, b.distances,
+                                       rtol=1e-6, atol=0, err_msg=tag)
+
+        live = []
+        for step in range(24):
+            op = int(rng.integers(0, 4))
+            if op <= 1 or not live:
+                # odd sizes: per-shard counts stay non-divisible
+                n = int(rng.integers(1, 24)) | 1
+                pts = rng.normal(size=(n, dim)).astype(np.float32)
+                g1, g2 = sh.add(pts), ref.add(pts)
+                np.testing.assert_array_equal(g1, g2)
+                live.extend(g1.tolist())
+            elif op == 2:
+                m = int(rng.integers(1, min(9, len(live)) + 1))
+                pick = rng.choice(len(live), size=m, replace=False)
+                dels = np.asarray([live[i] for i in pick], np.int64)
+                assert sh.delete(dels) == ref.delete(dels)
+                gone = set(dels.tolist())
+                live = [g for g in live if g not in gone]
+            else:
+                check_sets(f"step{step}-mid")
+            if step % 6 == 5:
+                check_flushed(f"step{step}")
+        check_flushed("final")
+
+        # fully-tombstoned shard: every gid with g % 4 == 2 dies; the
+        # shard's snapshot short-circuits on the host, the fold still
+        # returns the exact global answer
+        dead = np.asarray([g for g in live if g % 4 == 2], np.int64)
+        assert sh.delete(dead) == ref.delete(dead) == len(dead)
+        live = [g for g in live if g % 4 != 2]
+        assert sh.shards[2].n_live == 0
+        check_flushed("shard2-tombstoned")
+
+        # kill-and-recover from the WALs alone
+        pre_epochs = [s.log.epoch for s in sh.shards]
+        q = rng.normal(size=(9, dim)).astype(np.float32)
+        before = sh.constrained_knn(q, k, 3.0)
+        n_before = sh.n_live
+        sh.close()
+        del sh
+        sh2 = ShardedStreamingIndex(mk(), n_shards=4, mesh=mesh,
+                                    wal_dir=wal_dir)
+        assert sh2.n_live == n_before == len(live)
+        after = sh2.constrained_knn(q, k, 3.0)
+        np.testing.assert_array_equal(before.gids, after.gids)
+        np.testing.assert_array_equal(before.distances, after.distances)
+        for sub, e in zip(sh2.shards, pre_epochs):
+            assert sub.log.epoch >= e, "epoch moved backward on recovery"
+        # and the recovered index still matches the untouched reference
+        sh = sh2
+        check_flushed("post-recovery")
+        print("SHARDED_STREAMING_OK")
+        """
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert "SHARDED_STREAMING_OK" in out.stdout, out.stdout + "\n" + out.stderr
+
+
+# -- in-process: host-fold path (1 device, 3 shards) -------------------------
+def test_sharded_host_fold_matches_single_device():
+    rng = np.random.default_rng(11)
+    dim, k, r = 5, 4, 3.0
+    mk = lambda: StreamingConfig(dim=dim, delta_capacity=16)
+    sh = ShardedStreamingIndex(mk(), n_shards=3)  # 1 CPU dev: host fold
+    ref = StreamingIndex(mk())
+    for _ in range(5):
+        pts = rng.normal(
+            size=(int(rng.integers(5, 30)), dim)
+        ).astype(np.float32)
+        np.testing.assert_array_equal(sh.add(pts), ref.add(pts))
+    dels = np.asarray([1, 5, 9, 30, 31])
+    assert sh.delete(dels) == ref.delete(dels)
+    sh.flush()
+    ref.flush()
+    q = rng.normal(size=(6, dim)).astype(np.float32)
+    a = sh.constrained_knn(q, k, r)
+    b = ref.constrained_knn(q, k, r)
+    np.testing.assert_array_equal(a.gids, b.gids)
+    np.testing.assert_array_equal(a.distances, b.distances)
+    # live_points view is gid-sorted and identical too
+    pa, ga = sh.live_points()
+    pb, gb = ref.live_points()
+    np.testing.assert_array_equal(ga, gb)
+    np.testing.assert_array_equal(pa, pb)
+
+
+# -- in-process: WAL ---------------------------------------------------------
+def test_wal_replay_rebuilds_plain_index(tmp_path):
+    rng = np.random.default_rng(2)
+    dim, k = 5, 4
+    cfg = StreamingConfig(
+        dim=dim, delta_capacity=32, wal_path=str(tmp_path / "idx.wal")
+    )
+    idx = StreamingIndex(cfg)
+    g = idx.add(rng.normal(size=(100, dim)).astype(np.float32))
+    idx.delete(g[::7])
+    idx.flush()
+    q = rng.normal(size=(6, dim)).astype(np.float32)
+    before = idx.constrained_knn(q, k, 2.0)
+    epoch_before = idx.log.epoch
+    pts_b, gids_b = idx.live_points()
+    idx.close()
+
+    rec = StreamingIndex(cfg)  # same config: construction IS recovery
+    after = rec.constrained_knn(q, k, 2.0)
+    np.testing.assert_array_equal(before.gids, after.gids)
+    np.testing.assert_array_equal(before.distances, after.distances)
+    pts_a, gids_a = rec.live_points()
+    np.testing.assert_array_equal(gids_b, gids_a)
+    np.testing.assert_array_equal(pts_b, pts_a)
+    assert rec.log.epoch >= epoch_before
+    # gid assignment resumes where the pre-crash index left off
+    g2 = rec.add(rng.normal(size=(3, dim)).astype(np.float32))
+    assert g2[0] == 100
+
+
+def test_wal_torn_tail_recovers_valid_prefix(tmp_path):
+    rng = np.random.default_rng(4)
+    dim = 4
+    cfg = StreamingConfig(
+        dim=dim, delta_capacity=16, wal_path=str(tmp_path / "torn.wal")
+    )
+    idx = StreamingIndex(cfg)
+    idx.add(rng.normal(size=(40, dim)).astype(np.float32))
+    n_live = idx.n_live
+    idx.close()
+    # simulate a crash mid-append: garbage bytes after the last record
+    with open(cfg.wal_path, "ab") as f:
+        f.write(b"\x37\x13" * 9)
+    rec = StreamingIndex(cfg)
+    assert rec.n_live == n_live
+    # the torn tail was truncated; appending afterwards stays replayable
+    rec.add(rng.normal(size=(5, dim)).astype(np.float32))
+    rec.close()
+    records = list(wal_mod.replay(cfg.wal_path))
+    assert [op for op, _ in records] == ["add", "add"]
+    rec2 = StreamingIndex(cfg)
+    assert rec2.n_live == n_live + 5
+
+
+# -- in-process: deferred merges + background compaction ---------------------
+def test_defer_merges_moves_compaction_off_write_path():
+    rng = np.random.default_rng(6)
+    cfg = StreamingConfig(dim=5, delta_capacity=8, defer_merges=True)
+    idx = StreamingIndex(cfg)
+    idx.add(rng.normal(size=(200, 5)).astype(np.float32))
+    s0 = idx.stats()
+    assert s0["tiered_merges"] == 0  # the write path really deferred
+    assert s0["n_segments"] > 4
+    q = rng.normal(size=(5, 5)).astype(np.float32)
+    before = idx.knn(q, 4)
+    while idx.maintain():
+        pass
+    s1 = idx.stats()
+    assert s1["tiered_merges"] > 0
+    assert s1["n_segments"] < s0["n_segments"]
+    assert s1["maintenance_runs"] > 0
+    after = idx.knn(q, 4)
+    np.testing.assert_array_equal(before.gids, after.gids)
+    np.testing.assert_array_equal(before.distances, after.distances)
+
+
+def test_background_compaction_thread():
+    rng = np.random.default_rng(7)
+    cfg = StreamingConfig(dim=4, delta_capacity=8, defer_merges=True)
+    idx = StreamingIndex(cfg)
+    idx.start_background_compaction(interval=0.01)
+    try:
+        for _ in range(10):
+            idx.add(rng.normal(size=(20, 4)).astype(np.float32))
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            if idx.stats()["tiered_merges"] > 0:
+                break
+            time.sleep(0.02)
+        else:
+            pytest.fail("background thread never merged")
+    finally:
+        idx.stop_background_compaction()
+    # exactness survives concurrent background merging: same answers as
+    # an index that received the identical stream without the thread
+    idx2 = StreamingIndex(
+        StreamingConfig(dim=4, delta_capacity=8, defer_merges=True)
+    )
+    rng2 = np.random.default_rng(7)
+    for _ in range(10):
+        idx2.add(rng2.normal(size=(20, 4)).astype(np.float32))
+    idx.flush()
+    idx2.flush()
+    while idx.maintain() or idx2.maintain():
+        pass
+    q = rng.normal(size=(6, 4)).astype(np.float32)
+    a, b = idx.knn(q, 5), idx2.knn(q, 5)
+    np.testing.assert_array_equal(a.gids, b.gids)
+    np.testing.assert_array_equal(a.distances, b.distances)
