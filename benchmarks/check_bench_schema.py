@@ -10,6 +10,11 @@ Checks every ``BENCH_<section>.json`` in the output directory
     occupancy — and its per-pow2-class dispatch records must sum to the
     total dispatch record (the "dispatches bounded by the batch-class
     set" acceptance property, re-checked offline from the artifact);
+  * ``BENCH_faults.json`` must carry the chaos-smoke set — overload
+    rejections/sheds, deadline expiries, client retries, degraded-mode
+    partial queries and shard failovers, checkpoint-vs-replay recovery
+    timings, warmup timings — with the fault-path counts strictly
+    positive (a zero means the scenario stopped exercising the path);
   * ``BENCH_obs.json``: the three registry sections are present,
     counters are non-negative integers, gauges are numbers, and every
     histogram has a ``unit`` plus consistent ``count`` / sparse
@@ -114,6 +119,56 @@ def check_serve(path: str, payload: dict) -> List[str]:
             b = r["name"].rsplit("_", 1)[-1]
             if not (b.isdigit() and int(b) & (int(b) - 1) == 0):
                 errs.append(f"{path}: {r['name']} class {b} not a pow2")
+    return errs
+
+
+def check_faults(path: str, payload: dict) -> List[str]:
+    """Chaos-smoke artifact: every fault-tolerance path must have left a
+    trace — overload backpressure actually rejected AND shed, deadlines
+    actually expired, the degraded-mode shard skip actually produced
+    flagged partial results, and checkpoint recovery actually beat (or
+    at least ran alongside) full-log replay with real timings."""
+    errs = []
+    recs = {
+        r.get("name"): r
+        for r in payload.get("records", [])
+        if isinstance(r, dict)
+    }
+    required = {
+        "faults/overload_rejected": "count",
+        "faults/overload_shed": "count",
+        "faults/deadline_expired": "count",
+        "faults/client_retries": "count",
+        "faults/partial_queries": "count",
+        "faults/shard_failovers": "count",
+        "faults/recovery_checkpoint_ms": "ms",
+        "faults/recovery_full_replay_ms": "ms",
+        "faults/warmup_serial_ms": "ms",
+        "faults/warmup_parallel_ms": "ms",
+    }
+    for name, unit in required.items():
+        rec = recs.get(name)
+        if rec is None:
+            errs.append(f"{path}: missing record {name!r}")
+            continue
+        if rec.get("unit") != unit:
+            errs.append(
+                f"{path}: {name} unit={rec.get('unit')!r} != {unit!r}"
+            )
+        if not _num(rec.get("value")) or rec["value"] < 0:
+            errs.append(f"{path}: {name} value={rec.get('value')!r} bad")
+    # the overload/degradation paths must have actually fired — a zero
+    # here means the chaos scenario silently stopped exercising the path
+    for name in (
+        "faults/overload_rejected",
+        "faults/overload_shed",
+        "faults/deadline_expired",
+        "faults/partial_queries",
+        "faults/shard_failovers",
+    ):
+        rec = recs.get(name)
+        if rec is not None and _num(rec.get("value")) and rec["value"] <= 0:
+            errs.append(f"{path}: {name} is 0 — fault path never fired")
     return errs
 
 
@@ -276,6 +331,8 @@ def main(argv: List[str]) -> int:
             errs.extend(check_section(path, payload))
             if os.path.basename(path) == "BENCH_serve.json":
                 errs.extend(check_serve(path, payload))
+            elif os.path.basename(path) == "BENCH_faults.json":
+                errs.extend(check_faults(path, payload))
     if "BENCH_obs.json" not in {os.path.basename(p) for p in paths}:
         errs.append(f"{out_dir}: BENCH_obs.json missing")
     for e in errs:

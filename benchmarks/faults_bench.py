@@ -1,0 +1,298 @@
+"""Chaos bench: every failure path of the fault-tolerance layer, driven
+deterministically and counted into ``BENCH_faults.json``.
+
+Scenarios (each asserts its acceptance property in-run, so CI's
+chaos-smoke leg goes red if a path silently stops working):
+
+  * overload — a slowed dispatcher (injected ``frontend.dispatch``
+    sleep) against a tiny admission queue, once per policy: "reject"
+    must reject with backpressure errors, "shed_oldest" must shed the
+    oldest queued requests; every accepted request still completes;
+  * deadlines — queued requests whose deadline passes are failed
+    BEFORE dispatch and counted;
+  * client retry — transient injected dispatch faults are cleared by
+    the jittered-backoff `RetryingClient`;
+  * degraded mode — a 2-shard index with one shard forced down serves
+    flagged partial results instead of raising, and heals transparently
+    when the fault clears;
+  * checkpoint recovery — recovery time from checkpoint + truncated
+    tail vs full-log replay over the same op history, verified to
+    rebuild the identical live set;
+  * warmup — frontend cold-start with serial vs concurrent batch-class
+    compilation (the ROADMAP follow-up 1 cut), timed on the same gauge
+    serving uses.
+
+Scales: BENCH_N caps the index sizes, BENCH_Q the request volume
+(shared convention with the other sections).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro import obs
+from repro.index import (
+    FailoverPolicy,
+    ShardedStreamingIndex,
+    StreamingConfig,
+    StreamingIndex,
+    faults,
+)
+from repro.serve.frontend import (
+    DeadlineExceededError,
+    FrontendConfig,
+    OverloadError,
+    RetryingClient,
+    RetryPolicy,
+    SearchFrontend,
+)
+
+from . import common
+
+DIM = 8
+K = 4
+
+
+def _overload(policy: str, n_req: int) -> None:
+    idx = StreamingIndex(StreamingConfig(dim=DIM, delta_capacity=256))
+    idx.add(np.random.default_rng(0).normal(size=(256, DIM)))
+    fe = SearchFrontend(
+        idx,
+        FrontendConfig(
+            k=K, max_batch=4, max_queue=4, overload_policy=policy,
+        ),
+    )
+    fe.start()
+    rng = np.random.default_rng(1)
+    futs, rejected = [], 0
+    with faults.active():
+        faults.arm("frontend.dispatch", sleep=0.01)
+        for _ in range(n_req):
+            try:
+                futs.append(fe.submit(rng.normal(size=DIM)))
+            except OverloadError:
+                rejected += 1
+        served = shed = 0
+        for f in futs:
+            try:
+                f.result(120)
+                served += 1
+            except OverloadError:
+                shed += 1
+    fe.stop()
+    if policy == "reject":
+        assert rejected > 0, "reject policy never rejected under overload"
+        assert served == len(futs), "an accepted request was dropped"
+        common.emit(
+            "faults/overload_rejected", float(rejected),
+            f"queue=4_of_{n_req}", unit="count",
+        )
+    else:
+        assert shed > 0, "shed_oldest never shed under overload"
+        assert served + shed == len(futs), "a request was orphaned"
+        common.emit(
+            "faults/overload_shed", float(shed),
+            f"queue=4_of_{n_req}", unit="count",
+        )
+    common.emit(
+        f"faults/overload_served_{policy}", float(served),
+        "completed_despite_overload", unit="count",
+    )
+
+
+def _deadlines(n_req: int) -> None:
+    idx = StreamingIndex(StreamingConfig(dim=DIM, delta_capacity=256))
+    idx.add(np.random.default_rng(0).normal(size=(256, DIM)))
+    fe = SearchFrontend(
+        idx,
+        FrontendConfig(k=K, max_batch=2, default_deadline_s=0.02),
+    )
+    fe.start()
+    rng = np.random.default_rng(2)
+    with faults.active():
+        faults.arm("frontend.dispatch", sleep=0.05)
+        futs = [fe.submit(rng.normal(size=DIM)) for _ in range(n_req)]
+        expired = sum(
+            1
+            for f in futs
+            if isinstance(f.exception(120), DeadlineExceededError)
+        )
+    fe.stop()
+    assert expired > 0, "no deadline ever expired under slow dispatch"
+    common.emit(
+        "faults/deadline_expired", float(expired),
+        f"deadline=20ms_dispatch=50ms_n={n_req}", unit="count",
+    )
+
+
+def _client_retry() -> None:
+    idx = StreamingIndex(StreamingConfig(dim=DIM, delta_capacity=256))
+    idx.add(np.random.default_rng(0).normal(size=(256, DIM)))
+    fe = SearchFrontend(idx, FrontendConfig(k=K, max_batch=1))
+    fe.start()
+    client = RetryingClient(
+        fe, RetryPolicy(max_attempts=5, base_backoff_s=0.005, seed=7)
+    )
+    before = obs.REGISTRY.counter("serve.client.retries").value
+    with faults.active():
+        faults.arm(
+            "frontend.dispatch", times=2, exc=faults.InjectedFault
+        )
+        reply = client.search(np.zeros(DIM, np.float32), timeout=120)
+    fe.stop()
+    retries = obs.REGISTRY.counter("serve.client.retries").value - before
+    assert reply.gids.shape == (K,), "retried request never completed"
+    assert retries == 2, f"expected 2 retries, saw {retries}"
+    common.emit(
+        "faults/client_retries", float(retries),
+        "transient_dispatch_faults_cleared", unit="count",
+    )
+
+
+def _degraded_mode(n: int, n_q: int) -> None:
+    rng = np.random.default_rng(3)
+    idx = ShardedStreamingIndex(
+        StreamingConfig(dim=DIM, delta_capacity=512),
+        n_shards=2,
+        failover=FailoverPolicy(max_retries=1, backoff_s=0.001),
+    )
+    idx.add(rng.normal(size=(n, DIM)))
+    idx.flush()
+    q = rng.normal(size=(n_q, DIM)).astype(np.float32)
+    full = idx.constrained_knn(q, K, np.inf)
+    assert not full.partial
+    before = obs.REGISTRY.counter("shard.partial_queries").value
+    with faults.active():
+        faults.arm("shard.search", shard=1, exc=faults.InjectedFault)
+        t0 = time.perf_counter()
+        degraded = idx.constrained_knn(q, K, np.inf)
+        degraded_s = time.perf_counter() - t0
+    assert degraded.partial, "failed shard did not flag partial"
+    valid = degraded.gids[degraded.gids >= 0]
+    assert len(valid) and np.all(valid % 2 == 0), (
+        "degraded answers leaked dead-shard gids"
+    )
+    healed = idx.constrained_knn(q, K, np.inf)
+    assert not healed.partial
+    np.testing.assert_array_equal(healed.gids, full.gids)
+    partials = (
+        obs.REGISTRY.counter("shard.partial_queries").value - before
+    )
+    common.emit(
+        "faults/partial_queries", float(partials),
+        "one_shard_down", unit="count",
+    )
+    common.emit(
+        "faults/degraded_query_ms", degraded_s * 1e3 / max(1, 1),
+        f"{n_q}_queries_1_of_2_shards", unit="ms",
+    )
+    common.emit(
+        "faults/shard_failovers",
+        float(obs.REGISTRY.counter("shard.failovers", shard=1).value),
+        "retry_exhausted_skips", unit="count",
+    )
+
+
+def _checkpoint_recovery(n: int, tmp: str) -> None:
+    rng = np.random.default_rng(4)
+    batch = max(64, n // 16)
+    mk = lambda name, **kw: StreamingConfig(
+        dim=DIM,
+        delta_capacity=max(64, batch // 2),
+        wal_path=os.path.join(tmp, f"{name}.wal"),
+        auto_checkpoint=False,
+        **kw,
+    )
+    # identical op history into two logs
+    hist = [rng.normal(size=(batch, DIM)).astype(np.float32)
+            for _ in range(16)]
+    for name in ("ckpt", "replay"):
+        idx = StreamingIndex(mk(name))
+        for pts in hist:
+            idx.add(pts)
+            idx.delete(idx.log.live_gids()[:: 7][:4])
+        idx.flush()
+        if name == "ckpt":
+            assert idx.checkpoint()
+            truncated = idx.stats()["checkpoints"]
+            assert truncated >= 1
+        ref = idx.live_points()
+        idx.close()
+
+    t0 = time.perf_counter()
+    a = StreamingIndex(mk("ckpt"))
+    t_ckpt = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    b = StreamingIndex(mk("replay"))
+    t_replay = time.perf_counter() - t0
+    pa, ga = a.live_points()
+    pb, gb = b.live_points()
+    np.testing.assert_array_equal(ga, gb)
+    np.testing.assert_array_equal(pa, pb)
+    np.testing.assert_array_equal(pa, ref[0])
+    a.close()
+    b.close()
+    common.emit(
+        "faults/recovery_checkpoint_ms", t_ckpt * 1e3,
+        f"{len(hist)}_batches_of_{batch}", unit="ms",
+    )
+    common.emit(
+        "faults/recovery_full_replay_ms", t_replay * 1e3,
+        "same_history_no_checkpoint", unit="ms",
+    )
+    common.emit(
+        "faults/recovery_speedup", t_replay / max(t_ckpt, 1e-9),
+        "full_replay_over_checkpoint", unit="x",
+    )
+
+
+def _warmup(n: int) -> None:
+    rng = np.random.default_rng(5)
+    pts = rng.normal(size=(n, DIM)).astype(np.float32)
+    times = {}
+    for parallel in (False, True):
+        idx = StreamingIndex(StreamingConfig(dim=DIM, delta_capacity=1024))
+        idx.add(pts)
+        idx.flush()
+        fe = SearchFrontend(
+            idx,
+            FrontendConfig(
+                k=K, max_batch=32, warmup=True, warmup_parallel=parallel,
+            ),
+        )
+        fe.start()
+        g = obs.REGISTRY.find("serve.frontend.warmup_seconds")
+        times[parallel] = float(g.value)
+        fe.stop()
+    common.emit(
+        "faults/warmup_serial_ms", times[False] * 1e3,
+        "batch_classes_compiled_serially", unit="ms",
+    )
+    common.emit(
+        "faults/warmup_parallel_ms", times[True] * 1e3,
+        "batch_classes_compiled_concurrently", unit="ms",
+    )
+
+
+def run(full: bool = False) -> None:
+    import tempfile
+
+    n, n_q = common.sizes(full)
+    n = min(n, 50_000)
+    n_req = max(64, min(n_q, 2_000))
+    _overload("reject", n_req)
+    _overload("shed_oldest", n_req)
+    _deadlines(max(16, n_req // 8))
+    _client_retry()
+    _degraded_mode(min(n, 4096), max(8, min(n_q, 64)))
+    _checkpoint_recovery(min(n, 8192), tempfile.mkdtemp())
+    _warmup(min(n, 4096))
+
+
+if __name__ == "__main__":
+    common.reset_records()
+    run(full=os.environ.get("BENCH_FULL") == "1")
+    print("json=", common.write_bench_json("faults"))
+    print("obs=", common.write_obs_json())

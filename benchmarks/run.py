@@ -20,13 +20,14 @@ def main() -> None:
         "--only",
         default=None,
         help="comma list: depth,nodes_visited,constrained_nn,search_time,"
-        "scalability,kernels,roofline,streaming,serve",
+        "scalability,kernels,roofline,streaming,serve,faults",
     )
     args = ap.parse_args()
 
     from . import (
         constrained_nn,
         depth,
+        faults_bench,
         kernels_bench,
         nodes_visited,
         roofline_report,
@@ -46,6 +47,7 @@ def main() -> None:
         "roofline": roofline_report.run,         # dry-run roofline table
         "streaming": streaming.run,              # LSM mixed read/write
         "serve": serve_bench.run,                # frontend smoke (SLOs)
+        "faults": faults_bench.run,              # chaos smoke (failure paths)
     }
     from . import common
 

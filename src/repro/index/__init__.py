@@ -34,10 +34,12 @@ Amortization: with delta capacity C and merge factor f, a point is
 rebuilt O(log_f (N/C)) times over its lifetime, and at most
 O(f · log_f (N/C)) segments (plus the delta) are searched per query.
 """
+from . import checkpoint, faults  # noqa: F401
 from .delta import DeltaBuffer  # noqa: F401
 from .search import StreamResult, constrained_knn, knn  # noqa: F401
 from .segment import Segment, merge_segments, plan_merges, tier_of  # noqa: F401
 from .sharded import (  # noqa: F401
+    FailoverPolicy,
     ShardedSnapshot,
     ShardedStreamingIndex,
     data_mesh,

@@ -23,6 +23,10 @@ from .snapshot import Snapshot
 class StreamResult(NamedTuple):
     gids: np.ndarray       # (Q, k) global point ids, -1 = no result
     distances: np.ndarray  # (Q, k) inf where no result
+    # degraded-mode flag: True when one or more shards were skipped
+    # after failover retries, so the answer covers only the surviving
+    # shards' points (single-index searches are always complete)
+    partial: bool = False
 
 
 def constrained_knn(

@@ -133,10 +133,19 @@ class Segment:
 
     def live_points(self):
         """Live (points, gids) in the segment's original insertion order."""
+        pts, _, _ = self.host_rows()
+        return pts[self.live], self.gids[self.live]
+
+    def host_rows(self):
+        """ALL rows — (points f32, gids i64, live bool mask) — in the
+        segment's original insertion order: the checkpoint substrate.
+        `from_points` is deterministic, so rebuilding from these rows
+        and re-tombstoning ``~live`` reproduces this segment's device
+        arrays exactly (tombstones included)."""
         inv = np.empty(self.n_points, np.int64)
         inv[np.asarray(self.tree.perm)] = np.arange(self.n_points)
         orig = np.asarray(self.tree.points)[inv]
-        return orig[self.live], self.gids[self.live]
+        return orig, self.gids, self.live
 
 
 def tier_of(n_live: int, base: int, factor: int) -> int:

@@ -29,19 +29,28 @@ Search fans out, then folds:
      k-best is exact over its own points, and the union of per-shard
      k-bests is a superset of the global k-best.
 
-Recovery: with ``wal_dir`` set every shard writes its own WAL, and this
-layer stamps each add/bulk_load record's ``meta`` with the chunk's
-global ids. A restart replays each shard (its `StreamingIndex`
-constructor does that) and re-reads the same records here to rebuild
-the global↔local translation — the local ids a shard assigns during
-replay are contiguous in record order, exactly matching the order the
+Recovery: with ``wal_dir`` set every shard writes its own WAL (and its
+own checkpoint), and this layer stamps each add/bulk_load record's
+``meta`` with the chunk's global ids. A restart recovers each shard in
+its `StreamingIndex` constructor (checkpoint + WAL-tail replay) and
+rebuilds the global↔local translation here from the shard's replayed
+meta stream (`StreamingIndex.wal_metas`) — the local ids a shard
+assigns are contiguous in meta order, exactly matching the order the
 metas were recorded in.
+
+Degraded mode: per-shard search dispatches run under a `FailoverPolicy`
+— transient failures are retried with exponential backoff, a shard that
+stays down is skipped with the query's result flagged ``partial=True``
+and the failover counted on the obs registry, and only an all-shard
+failure raises. The fault-injection site ``shard.search`` lets tests
+and the chaos bench drive exactly these paths deterministically.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
 import threading
+import time
 from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import numpy as np
@@ -50,14 +59,30 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.core.distributed import _SHARD_MAP_KW, _shard_map
 from repro.query import merge as qmerge
 from repro.query.spec import QuerySpec
 
+from . import faults
 from . import search as search_mod
-from . import wal as wal_mod
 from .snapshot import Snapshot
 from .streaming import StreamingConfig, StreamingIndex
+
+
+@dataclasses.dataclass(frozen=True)
+class FailoverPolicy:
+    """Degraded-mode search policy: a failing shard dispatch is retried
+    with exponential backoff, then — when `enabled` — skipped, with the
+    query's result flagged ``partial=True`` and the skip counted on the
+    obs registry (``shard.failovers``). Disabled, the failure propagates
+    to the caller after the retries (strict mode); a query only ever
+    raises in degraded mode when EVERY shard fails."""
+
+    enabled: bool = True
+    max_retries: int = 2
+    backoff_s: float = 0.005
+    backoff_multiplier: float = 2.0
 
 
 def data_mesh(n_shards: int, axis: str = "data") -> Optional[Mesh]:
@@ -90,7 +115,9 @@ class ShardedStreamingIndex:
         mesh: Optional[Mesh] = None,
         wal_dir: Optional[str] = None,
         axis: str = "data",
+        failover: Optional[FailoverPolicy] = None,
     ) -> None:
+        self.failover = failover if failover is not None else FailoverPolicy()
         if mesh is not None and axis in mesh.shape:
             n_shards = n_shards or int(mesh.shape[axis])
         self.n_shards = int(n_shards or max(1, len(jax.devices())))
@@ -153,22 +180,21 @@ class ShardedStreamingIndex:
         return mesh
 
     def _recover_translation(self) -> None:
-        """Rebuild global↔local tables from the per-shard WAL metas
-        (the shards themselves already replayed in their constructors).
-        Registration order == record order == the shard's local-id
-        assignment order, so positions line up by construction."""
-        for s in range((self.n_shards)):
-            path = os.path.join(self._wal_dir, f"shard{s:03d}.wal")
-            for op, fields in wal_mod.replay(path):
-                if op in ("add", "bulk_load"):
-                    meta = fields.get("meta")
-                    if meta is None:
-                        raise ValueError(
-                            "sharded WAL record lacks global-gid meta; "
-                            "was this log written by a bare "
-                            "StreamingIndex?"
-                        )
-                    self._register(s, np.asarray(meta, np.int64))
+        """Rebuild global↔local tables from each shard's replayed meta
+        stream (`StreamingIndex.wal_metas`: the checkpoint-restored
+        prefix plus the WAL-tail replay, in the shard's local-id
+        assignment order). The WAL files alone no longer suffice —
+        checkpoint truncation drops the covered records — but the meta
+        stream is part of the checkpoint payload, so positions still
+        line up by construction."""
+        for s, sub in enumerate(self._shards):
+            for meta in sub.wal_metas:
+                if meta is None:
+                    raise ValueError(
+                        "sharded WAL record lacks global-gid meta; "
+                        "was this log written by a bare StreamingIndex?"
+                    )
+                self._register(s, np.asarray(meta, np.int64))
         if any(len(g) for g in self._g_of):
             self._next_gid = max(
                 int(g[-1]) for g in self._g_of if len(g)
@@ -290,6 +316,16 @@ class ShardedStreamingIndex:
                 changed |= sub.maintain()
         return changed
 
+    def checkpoint(self) -> bool:
+        """Checkpoint every shard (each truncates its own WAL). True if
+        any shard published one (False on volatile shards)."""
+        ok = False
+        with self._lock:
+            for s, sub in enumerate(self._shards):
+                with jax.default_device(self._devices[s]):
+                    ok |= sub.checkpoint()
+        return ok
+
     def start_background_compaction(self, interval: float = 0.05) -> None:
         for sub in self._shards:
             sub.start_background_compaction(interval)
@@ -312,29 +348,71 @@ class ShardedStreamingIndex:
                 ),
             )
 
+    def _search_shard(self, s: int, sub_snap: Snapshot, q, spec):
+        """One shard's engine dispatch with the failover retry loop.
+        `faults.fire` is INSIDE the loop, so a transient injected fault
+        (`times=1`) clears on retry exactly like a real flaky device."""
+        from repro.query import engine as qengine
+
+        pol = self.failover
+        attempts = 1 + max(0, pol.max_retries)
+        delay = pol.backoff_s
+        for attempt in range(attempts):
+            try:
+                faults.fire("shard.search", shard=s)
+                with jax.default_device(self._devices[s]):
+                    return qengine.execute(sub_snap, q, spec)
+            except Exception:
+                if attempt + 1 >= attempts:
+                    raise
+                obs.REGISTRY.counter("shard.search_retries", shard=s).inc()
+                time.sleep(delay)
+                delay *= pol.backoff_multiplier
+
     def constrained_knn(
         self, queries: np.ndarray, k: int, r
     ) -> search_mod.StreamResult:
-        """Exact constrained-KNN over all shards' live points."""
-        from repro.query import engine as qengine
+        """Exact constrained-KNN over all shards' live points.
 
+        Degraded mode (`FailoverPolicy.enabled`, the default): a shard
+        whose dispatch keeps failing after the retry budget is skipped
+        — its skip is counted (``shard.failovers``) and the result is
+        flagged ``partial=True`` — instead of failing the whole query.
+        Only when EVERY shard fails does the query raise."""
         snap = self.snapshot()
         q = np.asarray(queries, np.float32).reshape(-1, self.dim)
         spec = QuerySpec(k=k, radius=r)
         parts_d, parts_g = [], []
+        failed = 0
+        last_err: Optional[BaseException] = None
         for s, sub_snap in enumerate(snap.shards):
-            with jax.default_device(self._devices[s]):
-                res = qengine.execute(sub_snap, q, spec)
+            try:
+                res = self._search_shard(s, sub_snap, q, spec)
+            except Exception as e:
+                if not self.failover.enabled:
+                    raise
+                failed += 1
+                last_err = e
+                obs.REGISTRY.counter("shard.failovers", shard=s).inc()
+                continue
             local = np.asarray(res.gids, np.int64)
             glob = np.full_like(local, -1)
             valid = local >= 0
             glob[valid] = snap.g_of[s][local[valid]]
             parts_d.append(np.asarray(res.distances, np.float32))
             parts_g.append(glob)
+        if not parts_d:
+            raise RuntimeError(
+                f"all {self.n_shards} shards failed"
+            ) from last_err
+        partial = failed > 0
+        if partial:
+            obs.REGISTRY.counter("shard.partial_queries").inc()
         d, g = self._fold(parts_d, parts_g, k)
         return search_mod.StreamResult(
             gids=np.asarray(g, np.int64),
             distances=np.asarray(d, np.float32),
+            partial=partial,
         )
 
     def knn(self, queries: np.ndarray, k: int) -> search_mod.StreamResult:
@@ -344,12 +422,14 @@ class ShardedStreamingIndex:
     def _fold(self, parts_d, parts_g, k: int):
         """Fold per-shard sorted k-bests into the global k-best with the
         engine's merge primitive — inside `shard_map` over the data
-        axis when the mesh is real, else on the default device."""
-        if self.n_shards == 1:
+        axis when the mesh is real AND every shard answered, else on
+        the default device (a degraded query's surviving parts no
+        longer fill the mesh's data axis)."""
+        if len(parts_d) == 1:
             return parts_d[0], parts_g[0]
         # global gids stay < 2^31 (TombstoneLog guards assignment), so
         # the i32 merge lanes are safe
-        if self._mesh is not None:
+        if self._mesh is not None and len(parts_d) == self.n_shards:
             dd = np.stack(parts_d)                      # (S, Q, k) f32
             gg = np.stack(parts_g).astype(np.int32)     # (S, Q, k) i32
             fold = self._fold_fns.get(k)
@@ -387,4 +467,9 @@ class ShardedStreamingIndex:
         return jax.jit(fold)
 
 
-__all__ = ["ShardedSnapshot", "ShardedStreamingIndex", "data_mesh"]
+__all__ = [
+    "FailoverPolicy",
+    "ShardedSnapshot",
+    "ShardedStreamingIndex",
+    "data_mesh",
+]

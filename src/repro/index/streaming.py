@@ -52,6 +52,8 @@ from repro import obs
 from repro.core.types import TreeSpec
 from repro.kernels import quantize
 
+from . import checkpoint as checkpoint_mod
+from . import faults
 from . import search as search_mod
 from . import wal as wal_mod
 from .delta import DeltaBuffer
@@ -84,6 +86,13 @@ class StreamingConfig:
     # merges then run only via maintain() — typically from the
     # background compaction thread — keeping them off the write path
     defer_merges: bool = False
+    # checkpoint manifest shadowing the WAL (None = "<wal_path>.ckpt").
+    # With auto_checkpoint (the default), every merge/compaction point
+    # (maintain() that merged, compact()) atomically snapshots the
+    # sealed state and truncates the log to the ops after it, bounding
+    # both log size and recovery time; checkpoint() does it on demand.
+    checkpoint_path: Optional[str] = None
+    auto_checkpoint: bool = True
 
     def __post_init__(self) -> None:
         if self.spec is None:
@@ -158,29 +167,63 @@ class StreamingIndex:
         self._c_wal_records = reg.counter("index.wal_records", **lbl)
         self._c_wal_replayed = reg.counter("index.wal_replayed", **lbl)
         self._c_maintenance = reg.counter("index.maintenance_runs", **lbl)
+        self._c_checkpoints = reg.counter("wal.checkpoints", **lbl)
+        self._c_ckpt_loads = reg.counter("wal.checkpoint_loads", **lbl)
+        self._c_wal_truncated = reg.counter("wal.records_truncated", **lbl)
+        # host metas of every add/bulk_load ever applied, in local-gid
+        # assignment order (mirrors the WAL's meta stream; the sharded
+        # layer rebuilds its local→global translation from this, so the
+        # stream must survive WAL truncation via the checkpoint)
+        self.wal_metas: List[object] = []
+        self._ckpt_path: Optional[str] = None
 
         if config.wal_path:
-            # recovery IS construction: replay the intact prefix of an
-            # existing log through the very mutators that wrote it
-            # (self._wal is still None here, so nothing is re-logged),
-            # then fence the epoch and resume appending
-            records = list(wal_mod.replay(config.wal_path))
+            # recovery IS construction: load the latest durable
+            # checkpoint (if any), then replay the intact log records
+            # AFTER the sequence it covers through the very mutators
+            # that wrote them (self._wal is still None here, so nothing
+            # is re-logged), then fence the epoch and resume appending
+            self._ckpt_path = (
+                config.checkpoint_path
+                or checkpoint_mod.default_path(config.wal_path)
+            )
+            ckpt_seq = 0
+            loaded = checkpoint_mod.load(self._ckpt_path)
+            if loaded is not None:
+                payload, ckpt_seq = loaded
+                self._restore_checkpoint(payload)
+                self._c_ckpt_loads.inc()
             max_epoch = 0
-            for op, fields in records:
+            n_applied = 0
+            for i, (op, fields) in enumerate(
+                wal_mod.replay(config.wal_path)
+            ):
+                seq = wal_mod.record_seq(fields, i + 1)
+                fields.pop("_seq", None)
+                if seq <= ckpt_seq:
+                    # the checkpoint already covers this record — the
+                    # crash window between checkpoint publish and WAL
+                    # truncation must never double-apply
+                    continue
                 max_epoch = max(max_epoch, int(fields.pop("_epoch", 0)))
                 self._apply_wal_record(op, fields)
-            if records:
-                self._c_wal_replayed.inc(len(records))
-                # epoch stamps are taken BEFORE each op, so replaying
-                # the ops re-derives at least the stamped values; the
-                # fence additionally covers epoch bumps that were
-                # observed (and recorded) but whose cause was an
-                # aborted mutation the replay cannot reproduce
-                if self.log.epoch < max_epoch:
-                    self.log._epoch = max_epoch
+                n_applied += 1
+            if n_applied:
+                self._c_wal_replayed.inc(n_applied)
+            # epoch stamps are taken BEFORE each op, so replaying
+            # the ops re-derives at least the stamped values; the
+            # fence additionally covers epoch bumps that were
+            # observed (and recorded) but whose cause was an
+            # aborted mutation the replay cannot reproduce
+            if self.log.epoch < max_epoch:
+                self.log._epoch = max_epoch
             self._wal = wal_mod.WriteAheadLog(
                 config.wal_path, sync=config.wal_sync
             )
+            # a freshly-truncated log holds no records: resume the
+            # sequence from the checkpoint, never restart it below
+            # already-covered numbers
+            self._wal.last_seq = max(self._wal.last_seq, ckpt_seq)
 
     # -- introspection -------------------------------------------------------
     @property
@@ -247,6 +290,7 @@ class StreamingIndex:
             "compactions": self._c_compactions.value,
             "bulk_loads": self._c_bulk_loads.value,
             "wal_records": self._c_wal_records.value,
+            "checkpoints": self._c_checkpoints.value,
             "maintenance_runs": self._c_maintenance.value,
             "tombstone_garbage_ratio": (
                 n_dead / n_total if n_total else 0.0
@@ -291,6 +335,10 @@ class StreamingIndex:
         pts = np.asarray(points, np.float32).reshape(-1, self.config.dim)
         with self._write_lock:
             self._wal_append("add", points=pts, meta=meta)
+            # mirror the meta stream on the host (during replay too) so
+            # it can outlive WAL truncation via the checkpoint
+            if self.config.wal_path:
+                self.wal_metas.append(meta)
             try:
                 gids = self.log.assign(len(pts))
                 delta, segments = self._begin()
@@ -318,6 +366,8 @@ class StreamingIndex:
         pts = np.asarray(points, np.float32).reshape(-1, self.config.dim)
         with self._write_lock:
             self._wal_append("bulk_load", points=pts, meta=meta)
+            if self.config.wal_path:
+                self.wal_metas.append(meta)
             try:
                 gids = self.log.assign(len(pts))
                 delta, segments = self._begin()
@@ -406,6 +456,9 @@ class StreamingIndex:
             except BaseException:
                 self._recover_log()
                 raise
+            # compaction is the natural checkpoint moment: the WAL's
+            # whole history is now representable as one sealed state
+            self._auto_checkpoint()
 
     # -- background maintenance ----------------------------------------------
     def maintain(self) -> bool:
@@ -429,10 +482,11 @@ class StreamingIndex:
                     return False
                 self._c_maintenance.inc()
                 self._commit(delta2, segments2)
-                return True
             except BaseException:
                 self._recover_log()
                 raise
+            self._auto_checkpoint()
+            return True
 
     def start_background_compaction(self, interval: float = 0.05) -> None:
         """Run `maintain()` on a daemon thread whenever there is merge
@@ -472,6 +526,108 @@ class StreamingIndex:
         if self._wal is not None:
             self._wal.close()
             self._wal = None
+
+    # -- checkpointing -------------------------------------------------------
+    def checkpoint(self) -> bool:
+        """Atomically publish a checkpoint of the current logical state
+        and truncate the WAL to the records after it. Returns False on a
+        volatile index (no WAL — including mid-replay, when `_wal` is
+        still None, so a replayed `compact` record can never recurse
+        into checkpointing)."""
+        if self._wal is None:
+            return False
+        with self._write_lock:
+            seq = self._wal.last_seq
+            checkpoint_mod.write(
+                self._ckpt_path, self._checkpoint_payload(), seq
+            )
+            # past the rename above the checkpoint is durable; a crash
+            # anywhere below leaves a longer-than-needed log whose
+            # covered prefix recovery skips by sequence number
+            dropped = self._wal.truncate_through(seq)
+            self._c_checkpoints.inc()
+            if dropped:
+                self._c_wal_truncated.inc(dropped)
+            faults.fire("checkpoint.step", step="done")
+            return True
+
+    def _auto_checkpoint(self) -> None:
+        if self._wal is not None and self.config.auto_checkpoint:
+            self.checkpoint()
+
+    def _checkpoint_payload(self) -> dict:
+        """The logical state as host data. Segments are stored as their
+        FULL row sets (original insertion order + live mask), not just
+        live points: `Segment.from_points` is deterministic, so rebuild
+        + re-tombstone reproduces the exact device arrays — tombstoned
+        leaf slots included — and recovery stays bit-identical to a
+        full-log replay."""
+        state = self._state
+        segs = []
+        for uid in sorted(state.segments):
+            pts, gids, live = state.segments[uid].host_rows()
+            segs.append(
+                (uid, np.asarray(pts, np.float32),
+                 np.asarray(gids, np.int64), np.asarray(live, bool))
+            )
+        d = state.delta
+        return {
+            "dim": self.config.dim,
+            "version": state.version,
+            "next_gid": self.log.next_gid,
+            "n_deleted": self.log.n_deleted,
+            "epoch": self.log.epoch,
+            "next_uid": self._next_uid,
+            "segments": segs,
+            # raw delta rows incl. dead slots (gid -1) so the rebuilt
+            # arena is slot-for-slot identical to the live one
+            "delta_pts": np.asarray(d.points[: d.size], np.float32),
+            "delta_gids": np.asarray(d.gids[: d.size], np.int64),
+            "delta_n_dead": int(d.n_dead),
+            "wal_metas": list(self.wal_metas),
+        }
+
+    def _restore_checkpoint(self, payload: dict) -> None:
+        """Rebuild state from a checkpoint payload (construction-time
+        only: runs before the WAL tail is replayed)."""
+        cfg = self.config
+        if int(payload["dim"]) != cfg.dim:
+            raise ValueError(
+                f"checkpoint dim {payload['dim']} != config dim {cfg.dim}"
+            )
+        segments: Dict[int, Segment] = {}
+        for uid, pts, gids, live in payload["segments"]:
+            seg = Segment.from_points(
+                pts, gids, cfg.spec, backend=cfg.backend,
+                storage_dtype=cfg.storage_dtype,
+            )
+            dead = np.nonzero(~live)[0]
+            if len(dead):
+                seg = seg.tombstone(dead)
+            segments[int(uid)] = seg
+            locals_ = np.nonzero(live)[0]
+            self.log.place_segment(int(uid), gids[locals_], locals_)
+        delta = DeltaBuffer.empty(cfg.delta_capacity, cfg.dim)
+        dp = np.asarray(payload["delta_pts"], np.float32)
+        dg = np.asarray(payload["delta_gids"], np.int64)
+        if len(dp):
+            # dead slots ride along with gid -1, keeping slot numbering
+            # (and therefore the locator and search masks) exact
+            delta = delta.append(dp, dg)
+        nd = int(payload["delta_n_dead"])
+        if nd:
+            delta = dataclasses.replace(delta, n_dead=nd)
+        slots = np.nonzero(dg >= 0)[0]
+        if len(slots):
+            self.log.place_delta(dg[slots], slots)
+        self.log.next_gid = int(payload["next_gid"])
+        self.log.n_deleted = int(payload["n_deleted"])
+        self.log._epoch = int(payload["epoch"])
+        self._next_uid = int(payload["next_uid"])
+        self.wal_metas = list(payload["wal_metas"])
+        self._state = _State(
+            version=int(payload["version"]), delta=delta, segments=segments
+        )
 
     # -- read path -----------------------------------------------------------
     def snapshot(self) -> Snapshot:

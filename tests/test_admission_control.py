@@ -1,0 +1,257 @@
+"""Frontend admission control, deadlines, retry, and shutdown hygiene.
+
+These tests run against a host-only fake index (constant-time
+`constrained_knn`) so queue dynamics — not XLA compile times — are what
+is measured: the fault site ``frontend.dispatch`` injects the slow or
+failing dispatches that make overload and drain deadlines reproducible.
+One test at the end drives a real `StreamingIndex` through the full
+stack as a seam check.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.index import StreamingConfig, StreamingIndex, faults
+from repro.index.search import StreamResult
+from repro.serve.frontend import (
+    DeadlineExceededError,
+    FrontendConfig,
+    FrontendStopped,
+    OverloadError,
+    RetryingClient,
+    RetryPolicy,
+    SearchFrontend,
+)
+
+
+class FakeIndex:
+    """Streaming-search surface with no device work."""
+
+    dim = 4
+
+    def __init__(self, partial: bool = False) -> None:
+        self.partial = partial
+
+    def constrained_knn(self, q, k, r):
+        n = len(q)
+        return StreamResult(
+            gids=np.zeros((n, k), np.int64),
+            distances=np.zeros((n, k), np.float32),
+            partial=self.partial,
+        )
+
+
+def _frontend(**cfg_kw):
+    cfg = FrontendConfig(k=2, warmup=False, **cfg_kw)
+    return SearchFrontend(FakeIndex(), cfg)
+
+
+def test_overload_policy_validation():
+    with pytest.raises(ValueError):
+        FrontendConfig(overload_policy="drop_everything")
+
+
+def test_reject_policy_raises_and_counts():
+    fe = _frontend(max_batch=2, max_queue=2, overload_policy="reject")
+    fe.start()
+    before = obs.REGISTRY.counter("serve.admission.rejected").value
+    with faults.active():
+        faults.arm("frontend.dispatch", sleep=0.1)
+        futs, rejected = [], 0
+        for _ in range(30):
+            try:
+                futs.append(fe.submit(np.zeros(4)))
+            except OverloadError:
+                rejected += 1
+        assert rejected > 0
+        for f in futs:  # accepted requests all complete
+            assert f.result(10).gids.shape == (2,)
+    fe.stop()
+    assert obs.REGISTRY.counter(
+        "serve.admission.rejected"
+    ).value == before + rejected
+
+
+def test_shed_oldest_policy_fails_oldest_not_newest():
+    fe = _frontend(max_batch=2, max_queue=2, overload_policy="shed_oldest")
+    fe.start()
+    before = obs.REGISTRY.counter("serve.admission.shed").value
+    with faults.active():
+        faults.arm("frontend.dispatch", sleep=0.1)
+        futs = [fe.submit(np.zeros(4)) for _ in range(30)]
+        outcomes = []
+        for f in futs:
+            try:
+                f.result(10)
+                outcomes.append("ok")
+            except OverloadError:
+                outcomes.append("shed")
+    fe.stop()
+    shed = outcomes.count("shed")
+    assert shed > 0
+    # freshest-wins: the LAST submissions survive
+    assert outcomes[-1] == "ok"
+    assert obs.REGISTRY.counter(
+        "serve.admission.shed"
+    ).value == before + shed
+
+
+def test_deadlines_expire_before_dispatch():
+    fe = _frontend(max_batch=2, default_deadline_s=0.03)
+    fe.start()
+    before = obs.REGISTRY.counter("serve.admission.deadline_expired").value
+    with faults.active():
+        faults.arm("frontend.dispatch", sleep=0.15)
+        futs = [fe.submit(np.zeros(4)) for _ in range(8)]
+        # an explicit generous per-request deadline overrides the default
+        safe = fe.submit(np.zeros(4), deadline_s=30.0)
+        expired = sum(
+            1
+            for f in futs
+            if isinstance(f.exception(10), DeadlineExceededError)
+        )
+        assert expired > 0
+        assert safe.result(10).gids.shape == (2,)
+    fe.stop()
+    assert obs.REGISTRY.counter(
+        "serve.admission.deadline_expired"
+    ).value == before + expired
+
+
+def test_retrying_client_clears_transient_faults():
+    fe = _frontend(max_batch=1)
+    fe.start()
+    before = obs.REGISTRY.counter("serve.client.retries").value
+    client = RetryingClient(
+        fe, RetryPolicy(max_attempts=5, base_backoff_s=0.005)
+    )
+    with faults.active():
+        # two failing dispatches, then healthy: attempts 1-2 fail
+        # retryably, attempt 3 lands
+        faults.arm("frontend.dispatch", times=2, exc=faults.InjectedFault)
+        reply = client.search(np.zeros(4), timeout=10)
+    assert reply.gids.shape == (2,)
+    assert obs.REGISTRY.counter(
+        "serve.client.retries"
+    ).value == before + 2
+    fe.stop()
+
+
+def test_retrying_client_gives_up_on_nonretryable():
+    fe = _frontend(max_batch=1, default_deadline_s=0.01)
+    fe.start()
+    client = RetryingClient(fe, RetryPolicy(max_attempts=5))
+    with faults.active():
+        faults.arm("frontend.dispatch", sleep=0.1)
+        # occupy the dispatcher so the client's request queues past its
+        # 10ms deadline (deadlines are checked at dispatch time)
+        blocker = fe.submit(np.zeros(4), deadline_s=30.0)
+        with pytest.raises(DeadlineExceededError):
+            client.search(np.zeros(4), timeout=10)
+        blocker.result(10)
+    fe.stop()
+
+
+def test_submit_after_stop_raises_immediately():
+    fe = _frontend(max_batch=1)
+    fe.start()
+    fe.submit(np.zeros(4)).result(10)
+    fe.stop()
+    t0 = time.perf_counter()
+    with pytest.raises(FrontendStopped):
+        fe.submit(np.zeros(4))
+    assert time.perf_counter() - t0 < 0.5, "must fail fast, not block"
+
+
+def test_stop_fails_rather_than_orphans_past_drain_deadline():
+    fe = _frontend(max_batch=1, drain_timeout_s=0.2)
+    fe.start()
+    with faults.active():
+        faults.arm("frontend.dispatch", sleep=0.5)
+        futs = [fe.submit(np.zeros(4)) for _ in range(6)]
+        fe.stop()
+    # EVERY future resolved: served or failed, none orphaned
+    served = sum(1 for f in futs if f.exception(0) is None)
+    stopped = sum(
+        1 for f in futs if isinstance(f.exception(0), FrontendStopped)
+    )
+    assert served + stopped == len(futs)
+    assert stopped > 0, "drain deadline must have cut some futures"
+
+
+def test_blocked_submitter_is_released_by_stop():
+    import threading
+
+    fe = _frontend(max_batch=1, max_queue=1, overload_policy="block")
+    fe.start()
+    errs = []
+
+    def submitter():
+        try:
+            for _ in range(50):
+                fe.submit(np.zeros(4))
+        except FrontendStopped:
+            errs.append("stopped")
+
+    with faults.active():
+        faults.arm("frontend.dispatch", sleep=0.05)
+        t = threading.Thread(target=submitter)
+        t.start()
+        time.sleep(0.1)  # let it wedge against the full queue
+        fe.stop()
+        t.join(5)
+    assert not t.is_alive(), "blocked submit() must be woken by stop()"
+
+
+def test_partial_flag_propagates_to_replies():
+    fe = SearchFrontend(
+        FakeIndex(partial=True), FrontendConfig(k=2, warmup=False)
+    )
+    fe.start()
+    assert fe.submit(np.zeros(4)).result(10).partial
+    fe.stop()
+
+
+def test_parallel_warmup_covers_all_classes_and_times_itself():
+    calls = []
+
+    class Recorder(FakeIndex):
+        def constrained_knn(self, q, k, r):
+            calls.append(len(q))
+            return super().constrained_knn(q, k, r)
+
+    fe = SearchFrontend(
+        Recorder(), FrontendConfig(k=2, max_batch=16, warmup=True)
+    )
+    before = obs.REGISTRY.counter("serve.frontend.warmup_dispatches").value
+    fe.start()
+    fe.stop()
+    assert sorted(calls) == [1, 2, 4, 8, 16]
+    assert obs.REGISTRY.counter(
+        "serve.frontend.warmup_dispatches"
+    ).value == before + 5
+    g = obs.REGISTRY.find("serve.frontend.warmup_seconds")
+    assert g is not None and g.value > 0
+
+
+def test_full_stack_over_real_index():
+    rng = np.random.default_rng(17)
+    idx = StreamingIndex(StreamingConfig(dim=4, delta_capacity=32))
+    idx.add(rng.normal(size=(50, 4)))
+    fe = SearchFrontend(
+        idx,
+        FrontendConfig(
+            k=3, max_batch=4, overload_policy="reject",
+            default_deadline_s=30.0, warmup=True,
+        ),
+    )
+    with fe:
+        client = RetryingClient(fe)
+        reply = client.search(
+            rng.normal(size=4).astype(np.float32), timeout=60
+        )
+    assert reply.gids.shape == (3,)
+    assert np.all(reply.gids >= 0)
+    assert not reply.partial

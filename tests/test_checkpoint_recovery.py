@@ -1,0 +1,298 @@
+"""Checkpoint + WAL-tail recovery: equivalence and crash safety.
+
+The contract under test (index/checkpoint.py, index/wal.py,
+index/streaming.py):
+
+  * recovery from checkpoint + tail is BIT-identical to full-log
+    replay — same live rows, same gids, same search results;
+  * the checkpoint bounds the log: covered records are truncated away,
+    and the history-global sequence numbers keep the crash window
+    between checkpoint publish and truncation from double-applying;
+  * a crash injected at EVERY durability step of the checkpoint write
+    (serialize, tmp write halves, fsync, rename, dir fsync, WAL
+    truncation steps) recovers to exactly the pre-crash state;
+  * torn or corrupt frames in the post-checkpoint tail degrade to the
+    intact prefix, exactly like they always did for the full log.
+
+The 4-shard variant (subprocess, forced host devices) drives the same
+sweep through `ShardedStreamingIndex.checkpoint()` — a crash mid-fanout
+leaves some shards checkpointed, one mid-step, the rest untouched, and
+recovery must still agree with the uninterrupted twin.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.index import StreamingConfig, StreamingIndex, faults
+from repro.index import checkpoint as ckpt_mod
+from repro.index import wal as wal_mod
+
+
+def _mk(tmp, name, **kw):
+    return StreamingConfig(
+        dim=5,
+        delta_capacity=16,
+        wal_path=os.path.join(tmp, f"{name}.wal"),
+        **kw,
+    )
+
+
+def _apply_stream(idx, rng, n_steps=14):
+    """A randomized op stream (seeded by the caller's rng) touching
+    every WAL-logged mutator."""
+    live = []
+    for _ in range(n_steps):
+        op = int(rng.integers(0, 5))
+        if op <= 1 or not live:
+            pts = rng.normal(size=(int(rng.integers(1, 12)), 5))
+            live.extend(idx.add(pts).tolist())
+        elif op == 2:
+            m = int(rng.integers(1, min(6, len(live)) + 1))
+            pick = rng.choice(len(live), size=m, replace=False)
+            dels = np.asarray([live[i] for i in pick], np.int64)
+            idx.delete(dels)
+            gone = set(dels.tolist())
+            live = [g for g in live if g not in gone]
+        elif op == 3:
+            idx.flush()
+        else:
+            idx.compact()
+    return live
+
+
+def _same_index(a, b, q, k=4, r=3.0):
+    pa, ga = a.live_points()
+    pb, gb = b.live_points()
+    np.testing.assert_array_equal(ga, gb)
+    np.testing.assert_array_equal(pa, pb)
+    ra = a.constrained_knn(q, k, r)
+    rb = b.constrained_knn(q, k, r)
+    np.testing.assert_array_equal(ra.gids, rb.gids)
+    np.testing.assert_array_equal(ra.distances, rb.distances)
+
+
+def test_checkpoint_bounds_log_and_recovery_is_bit_identical(tmp_path):
+    """Twin op streams — one checkpointing, one never — recover to the
+    same index; the checkpointing one's log holds only the tail."""
+    tmp = str(tmp_path)
+    rng_a = np.random.default_rng(21)
+    rng_b = np.random.default_rng(21)
+    # auto_checkpoint fires at compact(); add manual checkpoints too
+    a = StreamingIndex(_mk(tmp, "a"))
+    b = StreamingIndex(_mk(tmp, "b", auto_checkpoint=False))
+    _apply_stream(a, rng_a)
+    _apply_stream(b, rng_b)
+    assert a.checkpoint()
+    tail_a = a.add(rng_a.normal(size=(6, 5)))
+    tail_b = b.add(rng_b.normal(size=(6, 5)))
+    np.testing.assert_array_equal(tail_a, tail_b)
+    a.delete(tail_a[:2])
+    b.delete(tail_b[:2])
+
+    # the checkpointing log holds only post-checkpoint records; the
+    # full log holds the whole history
+    n_a = len(list(wal_mod.replay(a.config.wal_path)))
+    n_b = len(list(wal_mod.replay(b.config.wal_path)))
+    assert 0 < n_a < n_b
+    assert a.stats()["checkpoints"] >= 1
+
+    q = np.random.default_rng(3).normal(size=(6, 5)).astype(np.float32)
+    _same_index(a, b, q)  # twins agree pre-kill
+    a.close()
+    b.close()
+    a2 = StreamingIndex(_mk(tmp, "a"))
+    b2 = StreamingIndex(_mk(tmp, "b", auto_checkpoint=False))
+    _same_index(a2, a, q)   # checkpoint + tail == pre-crash state
+    _same_index(b2, b, q)   # full replay == pre-crash state
+    _same_index(a2, b2, q)  # and the two recovery paths agree
+    a2.close()
+    b2.close()
+
+
+def test_sequence_numbers_survive_truncation_and_reopen(tmp_path):
+    cfg = _mk(str(tmp_path), "seq", auto_checkpoint=False)
+    idx = StreamingIndex(cfg)
+    idx.add(np.zeros((3, 5), np.float32))
+    idx.add(np.ones((2, 5), np.float32))
+    assert idx._wal.last_seq == 2
+    assert idx.checkpoint()
+    # truncated log is empty but the writer keeps counting from the
+    # covered sequence — and so does a reopened writer
+    assert len(list(wal_mod.replay(cfg.wal_path))) == 0
+    assert idx._wal.last_seq == 2
+    idx.add(np.zeros((1, 5), np.float32))
+    records = list(wal_mod.replay(cfg.wal_path))
+    assert [wal_mod.record_seq(f, i + 1) for i, (_, f) in
+            enumerate(records)] == [3]
+    idx.close()
+    idx2 = StreamingIndex(cfg)
+    assert idx2._wal.last_seq == 3
+    assert idx2.n_live == 6
+    idx2.close()
+
+
+def test_crash_at_every_checkpoint_step_single_device(tmp_path):
+    """The tentpole sweep: arm one InjectedCrash per checkpoint write
+    step; after each crash, recovery from the files alone must equal
+    the pre-crash index. No step is skipped."""
+    cfg = _mk(str(tmp_path), "sweep", auto_checkpoint=False)
+    rng = np.random.default_rng(7)
+    idx = StreamingIndex(cfg)
+    _apply_stream(idx, rng, n_steps=10)
+    q = rng.normal(size=(5, 5)).astype(np.float32)
+
+    n = faults.count_steps(lambda: idx.checkpoint(), "checkpoint.step")
+    assert n >= 10, f"sweep domain suspiciously small: {n} steps"
+    for k in range(n):
+        # mutate a little so every iteration checkpoints fresh state
+        idx.add(rng.normal(size=(2, 5)))
+        with faults.active():
+            faults.arm(
+                "checkpoint.step", after=k, times=1,
+                exc=faults.InjectedCrash,
+            )
+            with pytest.raises(faults.InjectedCrash):
+                idx.checkpoint()
+        idx.close()
+        recovered = StreamingIndex(cfg)
+        _same_index(recovered, idx, q)
+        idx = recovered
+    idx.close()
+
+
+def test_torn_and_corrupt_tail_after_checkpoint(tmp_path):
+    """Damage in the post-checkpoint tail behaves exactly like damage
+    always did: the intact prefix (checkpoint + clean tail records)
+    survives, the garbage is dropped."""
+    cfg = _mk(str(tmp_path), "tear", auto_checkpoint=False)
+    idx = StreamingIndex(cfg)
+    g = idx.add(np.random.default_rng(0).normal(size=(20, 5)))
+    idx.flush()
+    assert idx.checkpoint()
+    idx.add(np.full((2, 5), 7.0, np.float32))   # tail record 1 (intact)
+    idx.delete(g[:3])                           # tail record 2 (to tear)
+    idx.close()
+
+    faults.tear_last_frame(cfg.wal_path)
+    r1 = StreamingIndex(cfg)
+    # the tear dropped the delete: those rows are live again
+    assert r1.n_live == 22
+    r1.close()
+
+    faults.corrupt_frame(cfg.wal_path, index=0)
+    r2 = StreamingIndex(cfg)
+    # now the whole tail is garbage; the checkpoint state stands alone
+    assert r2.n_live == 20
+    r2.close()
+
+    # a corrupt checkpoint falls back to... nothing here (log was
+    # truncated), which is still a CLEAN empty recovery, not a crash
+    with open(ckpt_mod.default_path(cfg.wal_path), "r+b") as f:
+        f.seek(20)
+        f.write(b"\xff\xff\xff")
+    r3 = StreamingIndex(cfg)
+    assert r3.n_live == 0
+    r3.close()
+
+
+def test_epoch_and_gids_resume_after_checkpoint_recovery(tmp_path):
+    cfg = _mk(str(tmp_path), "epoch")
+    idx = StreamingIndex(cfg)
+    g = idx.add(np.random.default_rng(1).normal(size=(40, 5)))
+    idx.compact()            # bumps epoch; auto-checkpoints after
+    idx.delete(g[:5])
+    pre_epoch = idx.log.epoch
+    pre_next = idx.log.next_gid
+    assert pre_epoch >= 1
+    idx.close()
+    idx2 = StreamingIndex(cfg)
+    assert idx2.log.epoch >= pre_epoch, "epoch moved backward"
+    assert idx2.log.next_gid == pre_next
+    g2 = idx2.add(np.zeros((1, 5), np.float32))
+    assert g2[0] == pre_next, "gid assignment restarted"
+    idx2.close()
+
+
+def test_crash_at_every_checkpoint_step_4shard():
+    code = textwrap.dedent(
+        """
+        import os, tempfile
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np, jax
+        from repro.index import StreamingConfig, faults
+        from repro.index.sharded import ShardedStreamingIndex, data_mesh
+
+        assert jax.device_count() == 4
+        rng = np.random.default_rng(9)
+        dim, k = 4, 3
+        mesh = data_mesh(4)
+        wal_dir = tempfile.mkdtemp()
+        mk = lambda: StreamingConfig(dim=dim, delta_capacity=8,
+                                     auto_checkpoint=False)
+        reopen = lambda: ShardedStreamingIndex(
+            mk(), n_shards=4, mesh=mesh, wal_dir=wal_dir)
+
+        sh = reopen()
+        g = sh.add(rng.normal(size=(21, dim)))
+        sh.delete(g[::4])
+        sh.flush()
+        q = rng.normal(size=(4, dim)).astype(np.float32)
+
+        def state(s):
+            p, gg = s.live_points()
+            r = s.constrained_knn(q, k, 3.0)
+            return p, gg, r
+
+        n = faults.count_steps(lambda: sh.checkpoint(), "checkpoint.step")
+        assert n >= 4 * 10, f"4-shard sweep domain too small: {n}"
+        for step in range(n):
+            sh.add(rng.normal(size=(1, dim)))  # fresh state each round
+            p0, g0, r0 = state(sh)
+            with faults.active():
+                faults.arm("checkpoint.step", after=step, times=1,
+                           exc=faults.InjectedCrash)
+                try:
+                    sh.checkpoint()
+                    raise SystemExit(f"step {step} did not crash")
+                except faults.InjectedCrash:
+                    pass
+            sh.close()
+            sh = reopen()
+            p1, g1, r1 = state(sh)
+            np.testing.assert_array_equal(g0, g1, err_msg=f"step {step}")
+            np.testing.assert_array_equal(p0, p1, err_msg=f"step {step}")
+            np.testing.assert_array_equal(r0.gids, r1.gids,
+                                          err_msg=f"step {step}")
+            np.testing.assert_array_equal(r0.distances, r1.distances,
+                                          err_msg=f"step {step}")
+        # a clean checkpoint afterwards truncates every shard's log
+        assert sh.checkpoint()
+        from repro.index import wal as wal_mod
+        for s in range(4):
+            path = os.path.join(wal_dir, f"shard{s:03d}.wal")
+            assert len(list(wal_mod.replay(path))) == 0
+        # and recovery from checkpoints alone still round-trips
+        p0, g0, r0 = state(sh)
+        sh.close()
+        sh = reopen()
+        p1, g1, r1 = state(sh)
+        np.testing.assert_array_equal(g0, g1)
+        np.testing.assert_array_equal(r0.gids, r1.gids)
+        print("SHARDED_CKPT_SWEEP_OK")
+        """
+    )
+    out = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env={**os.environ, "PYTHONPATH": "src"},
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert "SHARDED_CKPT_SWEEP_OK" in out.stdout, (
+        out.stdout + "\n" + out.stderr
+    )

@@ -1,0 +1,182 @@
+"""The chaos layer itself (index/faults.py) and the degraded-mode
+failover it drives (index/sharded.py).
+
+Injector contract: rules are deterministic (`after`/`times` ordinals,
+seeded rng for probabilistic rules), `hits` counts encounters whether
+or not anything fired, and `active()` guarantees no rule leaks across
+tests. Failover contract: a transiently failing shard heals via
+retries, a dead shard is skipped with `partial=True` (counted on the
+obs registry), strict mode propagates, and an all-shard outage raises.
+"""
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.index import (
+    FailoverPolicy,
+    ShardedStreamingIndex,
+    StreamingConfig,
+    faults,
+)
+from repro.index.faults import FaultInjector, InjectedFault
+
+
+# -- the injector itself ------------------------------------------------------
+def test_rules_are_ordinal_deterministic():
+    inj = FaultInjector()
+    inj.arm("x", after=2, times=2, exc=InjectedFault)
+    fired = []
+    for i in range(8):
+        try:
+            inj.fire("x")
+            fired.append(False)
+        except InjectedFault:
+            fired.append(True)
+    # skips 2, fires exactly twice, then exhausted
+    assert fired == [False, False, True, True, False, False, False, False]
+    assert inj.hits("x") == 8
+
+
+def test_label_matching_and_hit_counting():
+    inj = FaultInjector()
+    inj.arm("shard.search", shard=1, exc=InjectedFault)
+    inj.fire("shard.search", shard=0)  # no match
+    with pytest.raises(InjectedFault):
+        inj.fire("shard.search", shard=1)
+    assert inj.hits("shard.search") == 2
+
+
+def test_probabilistic_rules_replay_identically():
+    def run():
+        inj = FaultInjector()
+        inj.arm("y", p=0.5, seed=42, exc=InjectedFault)
+        out = []
+        for _ in range(32):
+            try:
+                inj.fire("y")
+                out.append(0)
+            except InjectedFault:
+                out.append(1)
+        return out
+
+    a, b = run(), run()
+    assert a == b, "same seed must replay the same fault schedule"
+    assert 0 < sum(a) < 32
+
+
+def test_active_scope_resets_and_disarm():
+    with faults.active():
+        rule = faults.arm("z", exc=InjectedFault)
+        with pytest.raises(InjectedFault):
+            faults.fire("z")
+        faults.disarm(rule)
+        faults.fire("z")  # disarmed: no raise
+    faults.fire("z")  # out of scope: injector is clean
+    assert not faults.INJECTOR.enabled
+
+
+def test_count_steps_counts_without_firing():
+    def fn():
+        for _ in range(5):
+            faults.fire("steps")
+
+    assert faults.count_steps(fn, "steps") == 5
+    assert not faults.INJECTOR.enabled
+
+
+def test_injected_faults_are_counted_on_obs():
+    before = obs.REGISTRY.counter("faults.injected", site="w").value
+    with faults.active():
+        faults.arm("w", exc=InjectedFault, times=3)
+        for _ in range(5):
+            try:
+                faults.fire("w")
+            except InjectedFault:
+                pass
+    assert obs.REGISTRY.counter(
+        "faults.injected", site="w"
+    ).value == before + 3
+
+
+# -- degraded-mode failover ---------------------------------------------------
+@pytest.fixture(scope="module")
+def sharded():
+    rng = np.random.default_rng(13)
+    idx = ShardedStreamingIndex(
+        StreamingConfig(dim=4, delta_capacity=16),
+        n_shards=2,
+        failover=FailoverPolicy(max_retries=1, backoff_s=0.001),
+    )
+    idx.add(rng.normal(size=(40, 4)))
+    idx.flush()
+    q = rng.normal(size=(5, 4)).astype(np.float32)
+    return idx, q
+
+
+def test_single_shard_failure_returns_flagged_partial(sharded):
+    idx, q = sharded
+    full = idx.constrained_knn(q, 4, 3.0)
+    assert not full.partial
+    before = obs.REGISTRY.counter("shard.failovers", shard=1).value
+    with faults.active():
+        faults.arm("shard.search", shard=1, exc=InjectedFault)
+        res = idx.constrained_knn(q, 4, 3.0)
+    assert res.partial, "skipped shard must flag the result partial"
+    valid = res.gids[res.gids >= 0]
+    assert len(valid), "surviving shard's answers must still flow"
+    assert np.all(valid % 2 == 0), "only shard-0 (even) gids expected"
+    assert obs.REGISTRY.counter(
+        "shard.failovers", shard=1
+    ).value == before + 1
+    # the partial answer is exactly the full answer restricted to the
+    # surviving shard's points
+    for i in range(len(q)):
+        want = [g for g in full.gids[i].tolist() if g >= 0 and g % 2 == 0]
+        got = [g for g in res.gids[i].tolist() if g >= 0]
+        assert got[: len(want)] == want or set(want) <= set(got)
+
+
+def test_transient_fault_heals_via_retry(sharded):
+    idx, q = sharded
+    full = idx.constrained_knn(q, 4, 3.0)
+    before = obs.REGISTRY.counter("shard.search_retries", shard=0).value
+    with faults.active():
+        faults.arm("shard.search", shard=0, times=1, exc=InjectedFault)
+        res = idx.constrained_knn(q, 4, 3.0)
+    assert not res.partial
+    np.testing.assert_array_equal(res.gids, full.gids)
+    np.testing.assert_array_equal(res.distances, full.distances)
+    assert obs.REGISTRY.counter(
+        "shard.search_retries", shard=0
+    ).value == before + 1
+
+
+def test_strict_mode_propagates_the_failure(sharded):
+    idx, q = sharded
+    old = idx.failover
+    idx.failover = FailoverPolicy(enabled=False, max_retries=0)
+    try:
+        with faults.active():
+            faults.arm("shard.search", shard=1, exc=InjectedFault)
+            with pytest.raises(InjectedFault):
+                idx.constrained_knn(q, 4, 3.0)
+    finally:
+        idx.failover = old
+
+
+def test_all_shards_down_raises(sharded):
+    idx, q = sharded
+    with faults.active():
+        faults.arm("shard.search", exc=InjectedFault)
+        with pytest.raises(RuntimeError, match="all .* shards failed"):
+            idx.constrained_knn(q, 4, 3.0)
+
+
+def test_slow_shard_is_not_a_failure(sharded):
+    idx, q = sharded
+    full = idx.constrained_knn(q, 4, 3.0)
+    with faults.active():
+        faults.arm("shard.search", shard=0, sleep=0.02)
+        res = idx.constrained_knn(q, 4, 3.0)
+    assert not res.partial
+    np.testing.assert_array_equal(res.gids, full.gids)
